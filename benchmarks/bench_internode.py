@@ -1,0 +1,91 @@
+"""Fig. 2 analogue — inter-pod (64/128 rank) broadcast: hierarchical tuned
+bcast vs flat one-shot. Measured on a (2, 4) pod x data mesh on host devices;
+TPU-v5e predictions use the two-level cost model with inter-pod link pricing."""
+from __future__ import annotations
+
+import json
+import math
+
+from repro.core import cost_model as cm
+from repro.core.tuner import Tuner
+
+from .common import run_worker
+
+SIZES = [4 << 10, 256 << 10, 4 << 20, 64 << 20]
+RANKS = [64, 128]
+
+
+def _model_hierarchical(M: int, n_pods: int, per_pod: int, tuner: Tuner) -> float:
+    """Inter-pod level over n_pods leaders + intra-pod fanout (paper's
+    hierarchical design)."""
+    inter = tuner.select(M, n_pods, inter_pod=True)
+    intra = tuner.select(M, per_pod)
+    t_inter = cm.cost(inter.algo, M, n_pods, inter_pod=True) if n_pods > 1 else 0.0
+    t_intra = cm.cost(intra.algo, M, per_pod)
+    return t_inter + t_intra
+
+
+def rows(quick: bool = False):
+    tuner = Tuner()
+    out = []
+    # measured: (pod=2, data=4) mesh on 8 host devices
+    worker = """
+import time, json
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import hierarchical_bcast, pbcast
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+
+def measure(M, algo, reps=5):
+    elems = max(M // 4, 1)
+    xs = jnp.asarray(np.random.RandomState(0).randn(2, 4, elems).astype(np.float32))
+    @jax.jit
+    def run(xs):
+        def f(b):
+            if algo == "hier":
+                out = hierarchical_bcast(b[0, 0], ("pod", "data"), root=0)
+            else:
+                out = pbcast(pbcast(b[0, 0], "pod", algo=algo), "data", algo=algo)
+            return out[None, None]
+        return jax.shard_map(f, mesh=mesh, in_specs=(P("pod", "data"),), out_specs=P("pod", "data"))(xs)
+    run(xs).block_until_ready()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter(); run(xs).block_until_ready(); ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+res = {}
+for M in %s:
+    res[str(M)] = {"hier": measure(M, "hier"), "xla_psum": measure(M, "xla_psum")}
+print(json.dumps(res))
+""" % (SIZES[:2] if quick else SIZES[:3])
+    measured = run_worker(worker, devices=8)
+
+    for n in RANKS:
+        n_pods = 2 if n > 64 else 1
+        per_pod = n // n_pods
+        for M in SIZES[:2] if quick else SIZES:
+            t_hier = _model_hierarchical(M, n_pods, per_pod, tuner)
+            # flat NCCL-style ring spanning both pods: (n-1) hops at the
+            # slowest (inter-pod) link bandwidth, fixed slices
+            t_flat = cm.cost("nccl_ring", M, n, inter_pod=True)
+            m = measured.get(str(M), {})
+            out.append(
+                {
+                    "name": f"fig2_internode/n{n}/M{M}",
+                    "us_per_call": (m.get("hier", 0.0)) * 1e6,
+                    "derived": {
+                        "measured_xla_psum_us": m.get("xla_psum", 0.0) * 1e6,
+                        "tpu_model_hier_us": t_hier * 1e6,
+                        "tpu_model_flat_us": t_flat * 1e6,
+                        "model_speedup": t_flat / max(t_hier, 1e-12),
+                    },
+                }
+            )
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows(quick=True):
+        print(r["name"], r["us_per_call"], json.dumps(r["derived"]))

@@ -1,0 +1,53 @@
+"""Tuning-framework artifact — the crossover table (paper Sec. IV-B):
+which algorithm + chunk count the tuner selects per (message size, ranks),
+for intra- and inter-pod paths. Written to experiments/tuner_table.json."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.tuner import Tuner
+
+
+def rows(quick: bool = False):
+    tuner = Tuner()
+    out = []
+    table = {}
+    sizes = [1 << p for p in range(8, 31, 2)]
+    ranks = [4, 16, 32, 256] if quick else [2, 4, 8, 16, 32, 64, 128, 256, 512]
+    for inter_pod in (False, True):
+        for n in ranks:
+            for M in sizes:
+                d = tuner.select(M, n, inter_pod=inter_pod)
+                key = f"{'inter' if inter_pod else 'intra'}/n{n}/M{M}"
+                table[key] = {
+                    "algo": d.algo,
+                    "num_chunks": d.num_chunks,
+                    "predicted_us": d.predicted_s * 1e6,
+                }
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/tuner_table.json", "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+
+    # summarize crossover points per rank count (intra-pod)
+    for n in ranks:
+        crossings = []
+        prev = None
+        for M in sizes:
+            algo = table[f"intra/n{n}/M{M}"]["algo"]
+            if algo != prev:
+                crossings.append(f"{algo}@{M}")
+                prev = algo
+        out.append(
+            {
+                "name": f"tuner_crossover/n{n}",
+                "us_per_call": table[f"intra/n{n}/M{1 << 20}"]["predicted_us"],
+                "derived": {"windows": crossings},
+            }
+        )
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows(quick=True):
+        print(r["name"], r["us_per_call"], json.dumps(r["derived"]))

@@ -1,0 +1,114 @@
+"""Fig. 3 analogue — application-level data-parallel training.
+
+Two parts:
+  (a) VGG-16 bucket trace: CNTK "divides the communication based on the
+      process count", so the per-iteration broadcast mix is every VGG
+      parameter tensor, bucketed. We price that mix per rank count under
+      the tuned library vs the one-shot baseline (TPU model), reproducing
+      the paper's observation that the mostly-large-message VGG regime
+      yields single-digit-% end-to-end gains (7% on 32 GPUs in the paper).
+  (b) measured end-to-end: small-model training throughput with
+      sync_mode=param_bcast vs grad_allreduce on 8 host devices.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.tuner import Tuner
+
+from .common import run_worker
+
+# VGG-16 parameter tensors (Simonyan & Zisserman 2014), conv (kh,kw,cin,cout)
+# + fc layers; f32 bytes.
+VGG16_SHAPES = [
+    (3, 3, 3, 64), (64,), (3, 3, 64, 64), (64,),
+    (3, 3, 64, 128), (128,), (3, 3, 128, 128), (128,),
+    (3, 3, 128, 256), (256,), (3, 3, 256, 256), (256,), (3, 3, 256, 256), (256,),
+    (3, 3, 256, 512), (512,), (3, 3, 512, 512), (512,), (3, 3, 512, 512), (512,),
+    (3, 3, 512, 512), (512,), (3, 3, 512, 512), (512,), (3, 3, 512, 512), (512,),
+    (25088, 4096), (4096,), (4096, 4096), (4096,), (1000, 4096), (1000,),
+]
+
+
+def vgg_messages(n_ranks: int) -> list[int]:
+    """Per-iteration bcast message sizes: CNTK splits each tensor across the
+    process count (paper Sec. V-D)."""
+    return [max(int(np.prod(s)) * 4 // n_ranks, 4) for s in VGG16_SHAPES]
+
+
+def trace_cost(n: int, tuner: Tuner) -> dict:
+    tuned = 0.0
+    oneshot = 0.0
+    algos = {}
+    for M in vgg_messages(n):
+        dec = tuner.select(M, n)
+        tuned += cm.cost(dec.algo, M, n)
+        oneshot += cm.cost("nccl_ring", M, n)   # NCCL 1.x: ring regardless of M
+        algos[dec.algo] = algos.get(dec.algo, 0) + 1
+    return {"tuned_s": tuned, "oneshot_s": oneshot, "algos": algos}
+
+
+def rows(quick: bool = False):
+    tuner = Tuner()
+    out = []
+    for n in ([32] if quick else [8, 32, 64, 128]):
+        c = trace_cost(n, tuner)
+        comm_speedup = c["oneshot_s"] / c["tuned_s"]
+        # end-to-end at a c_frac communication share (Amdahl): the paper sees
+        # 7% on VGG/32 GPUs — reproduced at ~10% comm fraction.
+        e2e = {
+            f"e2e_gain_at_{int(f*100)}pct_comm": 1.0 / ((1 - f) + f / comm_speedup) - 1.0
+            for f in (0.05, 0.10, 0.20)
+        }
+        out.append(
+            {
+                "name": f"fig3_vgg_trace/n{n}",
+                "us_per_call": c["tuned_s"] * 1e6,
+                "derived": {
+                    "oneshot_us": c["oneshot_s"] * 1e6,
+                    "comm_speedup": comm_speedup,
+                    "algo_mix": c["algos"],
+                    "total_bytes": sum(vgg_messages(n)),
+                    **e2e,
+                },
+            }
+        )
+
+    # measured end-to-end small-model training
+    worker = """
+import time, json
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.train.trainer import Trainer
+from repro.launch.mesh import make_local_mesh
+
+res = {}
+for mode in ("param_bcast", "grad_allreduce"):
+    run = RunConfig(total_steps=6, warmup_steps=1, sync_mode=mode, learning_rate=1e-3)
+    tr = Trainer(get_config("xlstm-350m-smoke"), run, mesh=make_local_mesh(1))
+    t0 = time.time()
+    _, _, hist = tr.train(batch=8, seq=64, steps=6, log_every=6)
+    res[mode] = {"total_s": time.time() - t0, "final_loss": hist[-1]["loss"]}
+print(json.dumps(res))
+"""
+    m = run_worker(worker, devices=8)
+    out.append(
+        {
+            "name": "fig3_train_e2e/xlstm-smoke/8dev",
+            "us_per_call": m["param_bcast"]["total_s"] * 1e6 / 6,
+            "derived": {
+                "allreduce_us_per_step": m["grad_allreduce"]["total_s"] * 1e6 / 6,
+                "bcast_final_loss": m["param_bcast"]["final_loss"],
+                "allreduce_final_loss": m["grad_allreduce"]["final_loss"],
+            },
+        }
+    )
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows(quick=True):
+        print(r["name"], r["us_per_call"], json.dumps(r["derived"]))

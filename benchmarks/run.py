@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig1: intra-pod bcast latency, tuned vs one-shot      (paper Fig. 1)
+  fig2: inter-pod hierarchical bcast, 64/128 ranks      (paper Fig. 2)
+  fig3: VGG/CNTK application-level data-parallel sync   (paper Fig. 3)
+  tuner: the tuning-framework crossover table           (paper Sec. IV-B)
+
+Prints ``name,us_per_call,derived`` CSV; also writes experiments/bench.json.
+Pass --full for the complete sweep (slower), default is the quick profile.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import bench_internode, bench_intranode, bench_tuner_table, bench_vgg_cntk
+
+    suites = {
+        "tuner": bench_tuner_table.rows,
+        "fig1": bench_intranode.rows,
+        "fig2": bench_internode.rows,
+        "fig3": bench_vgg_cntk.rows,
+    }
+    all_rows = []
+    failed = []
+    print("name,us_per_call,derived")
+    for key, fn in suites.items():
+        if args.only and args.only not in key:
+            continue
+        try:
+            for r in fn(quick=quick):
+                all_rows.append(r)
+                print(f"{r['name']},{r['us_per_call']:.2f},{json.dumps(r['derived'])}")
+                sys.stdout.flush()
+        except Exception as e:
+            failed.append((key, repr(e)))
+            traceback.print_exc()
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench.json", "w") as f:
+        json.dump(all_rows, f, indent=1)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

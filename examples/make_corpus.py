@@ -1,0 +1,27 @@
+"""Write a packed int32 token corpus for MemmapTokens (examples/train_100m)."""
+import argparse
+import os
+import sys
+
+import numpy as np
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--out", default="experiments/corpus.npy")
+ap.add_argument("--tokens", type=int, default=2_000_000)
+ap.add_argument("--vocab", type=int, default=32768)
+ap.add_argument("--seed", type=int, default=0)
+args = ap.parse_args()
+
+# Zipf unigram + a simple first-order structure so the loss has signal
+rng = np.random.RandomState(args.seed)
+ranks = np.arange(1, args.vocab + 1)
+p = ranks ** -1.1
+p /= p.sum()
+base = rng.choice(args.vocab, size=args.tokens, p=p).astype(np.int32)
+# bigram structure: with prob .5 next token = f(prev)
+mix = rng.rand(args.tokens) < 0.5
+shifted = (np.roll(base, 1) * 31 + 17) % args.vocab
+toks = np.where(mix, shifted, base).astype(np.int32)
+os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+np.save(args.out, toks)
+print(f"wrote {args.tokens} tokens (vocab {args.vocab}) to {args.out}")

@@ -1,0 +1,274 @@
+"""Optimized-HLO text parser for roofline accounting.
+
+Why: ``compiled.cost_analysis()`` visits each while-loop body ONCE — a
+scan-over-layers model therefore under-reports FLOPs/bytes by the layer
+count, and collective ops inside the loop are likewise under-counted. XLA
+records ``known_trip_count`` on while ops, so we parse the module text,
+build the computation call graph, and multiply every instruction by the
+product of trip counts on its call path.
+
+Extracted quantities (all PER DEVICE — the post-SPMD module is the
+per-device program):
+  * ``dot_flops``           — 2 * prod(out) * contracted, trip-multiplied
+  * ``dot_bytes``           — operand+output bytes of dots (HBM floor)
+  * ``collective_wire_bytes`` — bytes on the wire per collective family,
+    using standard ring accounting: all-gather (g-1)/g * out, all-reduce
+    2*(g-1)/g * bytes, reduce-scatter (g-1)/g * in, all-to-all (g-1)/g,
+    collective-permute = full operand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+__all__ = ["HloModule", "parse_hlo", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition)=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over all array shapes appearing in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, ()
+    dt, dims = m.groups()
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    return dt, shape
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    defn: str          # full rhs text
+
+    @property
+    def op(self) -> str:
+        # rhs looks like: "f32[32,256]{1,0} all-gather(%copy), ..." — the op
+        # token is the word right before '('
+        m = re.search(r"([\w\-]+)\(", self.defn)
+        return m.group(1) if m else ""
+
+
+@dataclasses.dataclass
+class HloModule:
+    computations: dict            # name -> list[Instr]
+    entry: str
+    multipliers: dict             # name -> float (sum over call paths)
+    unknown_trip: list            # while ops we could not bound
+    num_partitions: int = 1
+
+    # ---------------- metrics ----------------
+
+    def _iter_weighted(self):
+        for comp, instrs in self.computations.items():
+            w = self.multipliers.get(comp, 0.0)
+            if w <= 0:
+                continue
+            for ins in instrs:
+                yield w, ins
+
+    def dot_flops(self) -> float:
+        total = 0.0
+        for w, ins in self._iter_weighted():
+            if ins.op not in ("dot", "convolution"):
+                continue
+            dt, out_shape = _first_shape(ins.defn)
+            out = 1
+            for d in out_shape:
+                out *= d
+            contracted = self._contracted_size(ins)
+            total += w * 2.0 * out * contracted
+        return total
+
+    def _contracted_size(self, ins: Instr) -> int:
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.defn)
+        if not m:
+            return 1
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        # operand shapes: resolve via the operand symbol table
+        ops = re.search(r"\(([^)]*)\)", ins.defn)
+        if not ops:
+            return 1
+        first = ops.group(1).split(",")[0].strip().lstrip("%")
+        shape = self._symbols.get(first)
+        if shape is None:
+            return 1
+        n = 1
+        for d in dims:
+            if d < len(shape):
+                n *= shape[d]
+        return n
+
+    def dot_bytes(self) -> float:
+        total = 0.0
+        for w, ins in self._iter_weighted():
+            if ins.op not in ("dot", "convolution"):
+                continue
+            total += w * _shape_bytes(ins.defn.split(" ", 1)[0])
+            ops = re.search(r"\(([^)]*)\)", ins.defn)
+            if ops:
+                for oname in ops.group(1).split(","):
+                    shape_dt = self._symbols_dt.get(oname.strip().lstrip("%"))
+                    if shape_dt:
+                        dt, shape = shape_dt
+                        n = 1
+                        for d in shape:
+                            n *= d
+                        total += w * n * DTYPE_BYTES.get(dt, 4)
+        return total
+
+    def collective_wire_bytes(self) -> dict:
+        """Per-family wire bytes (per device), trip-count weighted."""
+        out: dict[str, float] = defaultdict(float)
+        for w, ins in self._iter_weighted():
+            op = ins.op
+            if op not in (
+                "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start",
+            ):
+                continue
+            fam = op.replace("-start", "")
+            g = self._group_size(ins)
+            out_bytes = _shape_bytes(ins.defn.split("(", 1)[0])
+            in_bytes = 0
+            ops = re.search(r"\(([^)]*)\)", ins.defn)
+            if ops:
+                for oname in ops.group(1).split(","):
+                    sd = self._symbols_dt.get(oname.strip().lstrip("%"))
+                    if sd:
+                        dt, shape = sd
+                        n = 1
+                        for d in shape:
+                            n *= d
+                        in_bytes += n * DTYPE_BYTES.get(dt, 4)
+            if fam == "all-gather":
+                wire = out_bytes * (g - 1) / max(g, 1)
+            elif fam == "all-reduce":
+                wire = 2.0 * max(in_bytes, out_bytes) * (g - 1) / max(g, 1)
+            elif fam == "reduce-scatter":
+                wire = in_bytes * (g - 1) / max(g, 1)
+            elif fam == "all-to-all":
+                wire = max(in_bytes, out_bytes) * (g - 1) / max(g, 1)
+            else:
+                # collective-permute: only the listed (src,dst) pairs
+                # transmit. Per-device average wire = operand * pairs/N —
+                # charging every device the full operand over-counted a
+                # binomial bcast ~6x (EXPERIMENTS.md §Perf pair 3).
+                n_pairs = ins.defn.count("},{") + 1 if "source_target_pairs" in ins.defn else 1
+                frac = n_pairs / max(self.num_partitions, 1)
+                wire = max(in_bytes, out_bytes) * min(frac, 1.0)
+            out[fam] += w * wire
+        return dict(out)
+
+    def _group_size(self, ins: Instr) -> int:
+        m = _GROUPS_RE.search(ins.defn)
+        if m:
+            return int(m.group(2))  # [n_groups, group_size]<=[N]
+        m = _GROUPS_LIST_RE.search(ins.defn)
+        if m:
+            return len([x for x in m.group(1).split(",") if x.strip() != ""])
+        return 2
+
+    def collective_count(self) -> dict:
+        out: dict[str, float] = defaultdict(float)
+        for w, ins in self._iter_weighted():
+            if ins.op in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute"):
+                out[ins.op] += w
+        return dict(out)
+
+
+def parse_hlo(txt: str) -> HloModule:
+    m = re.search(r"num_partitions=(\d+)", txt)
+    num_partitions = int(m.group(1)) if m else 1
+    computations: dict[str, list[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    symbols: dict[str, tuple] = {}
+    symbols_dt: dict[str, tuple] = {}
+    for line in txt.splitlines():
+        if not line.startswith(" "):
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                computations[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+                continue
+        if line.strip() == "}":
+            continue
+        m = _INSTR_RE.match(line)
+        if m and cur is not None:
+            name, defn = m.groups()
+            computations[cur].append(Instr(name, defn))
+            dt, shape = _first_shape(defn)
+            if dt:
+                symbols[name] = shape
+                symbols_dt[name] = (dt, shape)
+
+    if entry is None and computations:
+        entry = list(computations)[-1]
+
+    # ---- call graph with trip-count multipliers ----
+    mult: dict[str, float] = defaultdict(float)
+    unknown: list[str] = []
+
+    def visit(comp: str, w: float, depth=0):
+        if comp not in computations or depth > 50:
+            return
+        mult[comp] += w
+        for ins in computations[comp]:
+            called = _CALLED_RE.findall(ins.defn)
+            if not called:
+                continue
+            if ins.op == "while" or "while(" in ins.defn:
+                t = _TRIP_RE.search(ins.defn)
+                trip = float(t.group(1)) if t else 1.0
+                if not t:
+                    unknown.append(f"{comp}:{ins.name}")
+                body = re.search(r"body=%([\w.\-]+)", ins.defn)
+                cond = re.search(r"condition=%([\w.\-]+)", ins.defn)
+                if body:
+                    visit(body.group(1), w * trip, depth + 1)
+                if cond:
+                    visit(cond.group(1), w * (trip + 1), depth + 1)
+            else:
+                for c in called:
+                    visit(c, w, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+
+    mod = HloModule(computations, entry or "", dict(mult), unknown, num_partitions)
+    mod._symbols = symbols
+    mod._symbols_dt = symbols_dt
+    return mod

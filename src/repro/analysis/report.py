@@ -1,0 +1,70 @@
+"""Aggregate dry-run JSON artifacts into the roofline table (EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_rows(path: str = "experiments/dryrun") -> list[dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:9.2f}"
+
+
+def roofline_table(rows: list[dict], mesh: str = "pod16x16") -> str:
+    hdr = (
+        "| arch | shape | compute ms | memory ms | collective ms | bound | "
+        "model TFLOPs | useful | peak GiB/dev | top collective |\n"
+        "|---|---|---:|---:|---:|---|---:|---:|---:|---|\n"
+    )
+    lines = []
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(
+        (r for r in rows if r["mesh"] == mesh),
+        key=lambda r: (r["arch"], order.get(r["shape"], 9)),
+    ):
+        fam = r.get("wire_by_family", {})
+        top = max(fam, key=fam.get) if fam else "-"
+        peak = r["memory_analysis"]["peak_per_device_gb"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute_s'])} | "
+            f"{fmt_ms(r['t_memory_s'])} | {fmt_ms(r['t_collective_s'])} | "
+            f"{r['bottleneck']} | {r['model_flops']/1e12:10.1f} | "
+            f"{r['useful_flops_ratio']:.2f} | {peak:6.2f} | {top} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def summarize(rows: list[dict]) -> dict:
+    pod = [r for r in rows if r["mesh"] == "pod16x16"]
+
+    def frac(r):
+        tot = r["t_compute_s"] + r["t_memory_s"] + r["t_collective_s"]
+        return r["t_compute_s"] / tot if tot else 0.0
+
+    return {
+        "n_pairs_pod": len(pod),
+        "n_pairs_multipod": len([r for r in rows if r["mesh"] == "pod2x16x16"]),
+        "worst_compute_fraction": min(pod, key=frac)["arch" ] + "/" + min(pod, key=frac)["shape"],
+        "most_collective_bound": max(pod, key=lambda r: r["t_collective_s"])["arch"]
+        + "/"
+        + max(pod, key=lambda r: r["t_collective_s"])["shape"],
+        "bottleneck_counts": {
+            b: len([r for r in pod if r["bottleneck"] == b])
+            for b in ("compute", "memory", "collective")
+        },
+    }
+
+
+if __name__ == "__main__":
+    rows = load_rows()
+    print(roofline_table(rows))
+    print()
+    print(json.dumps(summarize(rows), indent=1))

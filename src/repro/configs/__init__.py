@@ -1,0 +1,50 @@
+"""Config registry: --arch <id> resolution for every assigned architecture."""
+from .base import INPUT_SHAPES, ModelConfig, RunConfig, ShapeSpec
+
+from . import (
+    gemma3_27b,
+    hymba_1p5b,
+    minitron_8b,
+    mixtral_8x7b,
+    moonshot_v1_16b_a3b,
+    paligemma_3b,
+    qwen15_32b,
+    qwen3_moe_30b_a3b,
+    whisper_large_v3,
+    xlstm_350m,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        xlstm_350m,
+        qwen3_moe_30b_a3b,
+        minitron_8b,
+        paligemma_3b,
+        mixtral_8x7b,
+        gemma3_27b,
+        hymba_1p5b,
+        whisper_large_v3,
+        qwen15_32b,
+        moonshot_v1_16b_a3b,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    """Resolve '--arch <id>'; '<id>-smoke' gives the reduced CPU variant."""
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).reduced()
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = [
+    "ARCHS",
+    "get_config",
+    "INPUT_SHAPES",
+    "ModelConfig",
+    "RunConfig",
+    "ShapeSpec",
+]

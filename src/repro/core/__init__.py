@@ -1,0 +1,37 @@
+"""Core: the paper's contribution — tuned broadcast collectives for DL.
+
+Pipelined-chain broadcast (Eq. 5) + the classical algorithm library
+(Eqs. 1-4, 6), analytic cost models, a tuning framework, pytree bucketing,
+and XLA-native one-shot baselines (the TPU stand-in for NCCL).
+"""
+from .algorithms import ring_allreduce
+from .bcast import (
+    bcast_stacked,
+    hierarchical_bcast,
+    pbcast,
+    pbcast_tree,
+    preduce_sum,
+)
+from .cost_model import CPU_SIM, TPU_V5E, Hardware, cost, optimal_chunk_bytes
+from .schedules import ALGORITHMS, Schedule, build
+from .tuner import Decision, Tuner, default_tuner
+
+__all__ = [
+    "ring_allreduce",
+    "pbcast",
+    "pbcast_tree",
+    "preduce_sum",
+    "hierarchical_bcast",
+    "bcast_stacked",
+    "Hardware",
+    "TPU_V5E",
+    "CPU_SIM",
+    "cost",
+    "optimal_chunk_bytes",
+    "Schedule",
+    "ALGORITHMS",
+    "build",
+    "Tuner",
+    "Decision",
+    "default_tuner",
+]

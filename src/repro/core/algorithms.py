@@ -1,0 +1,261 @@
+"""shard_map executors for broadcast/reduce schedules.
+
+The generic executor (:func:`execute_schedule`) replays any
+:class:`core.schedules.Schedule` with one ``lax.ppermute`` per round. For the
+paper's pipelined chain a fused ``lax.fori_loop`` executor
+(:func:`pipelined_chain_fused`) emits a single ppermute in the loop body —
+this is the production path (compact HLO independent of chunk count).
+
+All functions here run *inside* ``jax.shard_map`` over a named axis. The
+buffer convention is ``(num_chunks, chunk_elems)``; every rank holds a buffer
+of identical shape, only the root's content matters on entry, and on exit all
+ranks hold the root's data.
+
+Baselines ("the vendor library"): :func:`xla_psum_bcast` and
+:func:`xla_allgather_bcast` use XLA's native one-shot collectives — the TPU
+stand-ins for NCCL's broadcast (see DESIGN.md Sec. 2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .schedules import Schedule, build
+
+__all__ = [
+    "execute_schedule",
+    "execute_reduce_schedule",
+    "pipelined_chain_fused",
+    "xla_psum_bcast",
+    "xla_allgather_bcast",
+    "schedule_bcast",
+]
+
+
+def _axis_size(axis_name) -> int:
+    return lax.axis_size(axis_name)
+
+
+def _per_rank(values: np.ndarray, axis_name):
+    """Trace-time table lookup: values[axis_index]."""
+    return jnp.asarray(values)[lax.axis_index(axis_name)]
+
+
+def _lanes(transfers):
+    """Partition a round's transfers into ppermute 'lanes': within one lane
+    each rank is a source at most once (destinations are unique per round by
+    construction). Multi-lane rounds (e.g. the bidirectional chain's root
+    feeding both directions) issue one ppermute per lane; on TPU these run
+    on disjoint full-duplex links concurrently."""
+    lanes: list[list] = []
+    for t in transfers:
+        for lane in lanes:
+            if all(t.src != u.src for u in lane):
+                lane.append(t)
+                break
+        else:
+            lanes.append([t])
+    return lanes
+
+
+def execute_schedule(schedule: Schedule, buf: jax.Array, axis_name) -> jax.Array:
+    """Replay a bcast schedule. ``buf``: (num_chunks, chunk_elems)."""
+    if schedule.kind != "bcast":
+        raise ValueError("use execute_reduce_schedule for reduce schedules")
+    n = schedule.n
+    assert buf.ndim == 2 and buf.shape[0] == schedule.num_chunks, buf.shape
+    for full_round in schedule.rounds:
+        if not full_round.transfers:
+            continue
+        for lane in _lanes(full_round.transfers):
+            buf = _execute_lane(lane, buf, axis_name, n)
+    return buf
+
+
+def _execute_lane(transfers, buf, axis_name, n):
+    count = transfers[0].chunk_count
+    send_start = np.zeros(n, np.int32)
+    recv_start = np.zeros(n, np.int32)
+    is_dst = np.zeros(n, bool)
+    for t in transfers:
+        send_start[t.src] = t.chunk_start
+        recv_start[t.dst] = t.chunk_start
+        is_dst[t.dst] = True
+    perm = [(t.src, t.dst) for t in transfers]
+    s0 = _per_rank(send_start, axis_name)
+    operand = lax.dynamic_slice(buf, (s0, 0), (count, buf.shape[1]))
+    received = lax.ppermute(operand, axis_name, perm)
+    r0 = _per_rank(recv_start, axis_name)
+    current = lax.dynamic_slice(buf, (r0, 0), (count, buf.shape[1]))
+    received = jnp.where(_per_rank(is_dst, axis_name), received, current)
+    return lax.dynamic_update_slice(buf, received, (r0, 0))
+
+
+def execute_reduce_schedule(schedule: Schedule, buf: jax.Array, axis_name) -> jax.Array:
+    """Replay a reduce-to-root schedule (sum combiner). Whole-buffer transfers."""
+    if schedule.kind != "reduce":
+        raise ValueError("not a reduce schedule")
+    n = schedule.n
+    for rnd in schedule.rounds:
+        if not rnd.transfers:
+            continue
+        is_dst = np.zeros(n, bool)
+        for t in rnd.transfers:
+            is_dst[t.dst] = True
+        perm = [(t.src, t.dst) for t in rnd.transfers]
+        received = lax.ppermute(buf, axis_name, perm)
+        add = jnp.where(_per_rank(is_dst, axis_name), received, jnp.zeros_like(buf))
+        buf = buf + add
+    return buf
+
+
+def pipelined_chain_fused(
+    buf: jax.Array, axis_name, *, root: int = 0, unroll: int = 1
+) -> jax.Array:
+    """Fused executor for the paper's pipelined chain (Eq. 5).
+
+    ``buf``: (num_chunks, chunk_elems). Emits ONE ppermute inside a
+    ``fori_loop`` of ``num_chunks + n - 2`` rounds — HLO size is independent
+    of the chunk count, unlike the generic unrolled executor.
+
+    Round ``s``: the rank at logical chain position ``p`` sends chunk
+    ``s - p`` (if valid) to position ``p + 1`` and accepts chunk
+    ``s - p + 1`` from position ``p - 1``.
+    """
+    n = _axis_size(axis_name)
+    if n == 1:
+        return buf
+    num_chunks, chunk = buf.shape
+    perm = [((root + j) % n, (root + j + 1) % n) for j in range(n - 1)]
+    pos = (lax.axis_index(axis_name) - root) % n
+
+    def body(s, b):
+        c_send = jnp.clip(s - pos, 0, num_chunks - 1)
+        operand = lax.dynamic_slice(b, (c_send, 0), (1, chunk))
+        received = lax.ppermute(operand, axis_name, perm)
+        c_in = s - pos + 1
+        valid = (pos >= 1) & (c_in >= 0) & (c_in < num_chunks)
+        c_recv = jnp.clip(c_in, 0, num_chunks - 1)
+        current = lax.dynamic_slice(b, (c_recv, 0), (1, chunk))
+        merged = jnp.where(valid, received, current)
+        return lax.dynamic_update_slice(b, merged, (c_recv, 0))
+
+    return lax.fori_loop(0, num_chunks + n - 2, body, buf, unroll=unroll)
+
+
+def ring_allreduce(x: jax.Array, axis_name, *, unroll: int = 1) -> jax.Array:
+    """PAPER FUTURE-WORK (Sec. VII): explicit bandwidth-optimal ring
+    allreduce — reduce-scatter phase (n-1 rounds, each rank accumulates one
+    chunk) followed by an all-gather phase (n-1 rounds), built from the same
+    ppermute substrate as the broadcast library. Total wire: 2M(n-1)/n per
+    rank — matches the one-shot psum's bandwidth while staying inside the
+    explicit-schedule framework (tunable, hierarchical-composable).
+    """
+    n = _axis_size(axis_name)
+    if n == 1:
+        return x
+    shape, dtype = x.shape, x.dtype
+    flat = jnp.ravel(x)
+    chunk = -(-flat.size // n)
+    pad = n * chunk - flat.size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype)])
+    buf = flat.reshape(n, chunk)
+    rank = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # reduce-scatter: at step s, rank r sends chunk (r - s) mod n; after
+    # n-1 steps rank r owns the full sum of chunk (r + 1) mod n.
+    def rs_body(s, state):
+        b, acc = state
+        send_idx = (rank - s) % n
+        operand = jnp.where(
+            s == 0,
+            lax.dynamic_slice(b, (send_idx, 0), (1, chunk))[0],
+            acc,
+        )
+        received = lax.ppermute(operand, axis_name, perm)
+        recv_idx = (rank - s - 1) % n
+        acc = received + lax.dynamic_slice(b, (recv_idx, 0), (1, chunk))[0]
+        return b, acc
+
+    acc0 = lax.pvary(jnp.zeros((chunk,), dtype), axis_name)
+    _, acc = lax.fori_loop(0, n - 1, rs_body, (buf, acc0), unroll=unroll)
+    owned = (rank + 1) % n
+    buf = lax.dynamic_update_slice(buf, acc[None], (owned, 0))
+
+    # all-gather: circulate the reduced chunks for n-1 rounds.
+    def ag_body(s, b):
+        idx = (rank + 1 - s) % n
+        operand = lax.dynamic_slice(b, (idx, 0), (1, chunk))
+        received = lax.ppermute(operand, axis_name, perm)
+        recv_idx = (rank - s) % n
+        return lax.dynamic_update_slice(b, received, (recv_idx, 0))
+
+    buf = lax.fori_loop(0, n - 1, ag_body, buf, unroll=unroll)
+    out = buf.reshape(-1)
+    if pad:
+        out = out[: flat.size - pad]
+    return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# XLA-native one-shot baselines (the "NCCL" of the TPU world)
+# ---------------------------------------------------------------------------
+
+
+def xla_psum_bcast(x: jax.Array, axis_name, *, root: int = 0) -> jax.Array:
+    """Broadcast by masking non-root contributions and all-reducing."""
+    keep = lax.axis_index(axis_name) == root
+    return lax.psum(jnp.where(keep, x, jnp.zeros_like(x)), axis_name)
+
+
+def xla_allgather_bcast(x: jax.Array, axis_name, *, root: int = 0) -> jax.Array:
+    """Broadcast via all_gather + select of the root slice (n*M on the wire)."""
+    gathered = lax.all_gather(x, axis_name, axis=0)
+    return gathered[root]
+
+
+# ---------------------------------------------------------------------------
+# Convenience: build + execute for a named algorithm over a chunked buffer
+# ---------------------------------------------------------------------------
+
+
+def schedule_bcast(
+    buf: jax.Array,
+    axis_name,
+    *,
+    algo: str,
+    root: int = 0,
+    fused: bool = True,
+    **algo_kw,
+) -> jax.Array:
+    """Broadcast a (num_chunks, chunk) buffer with the named algorithm."""
+    n = _axis_size(axis_name)
+    if n == 1:
+        return buf
+    num_chunks = buf.shape[0]
+    # The fused fori_loop executor emits one ppermute regardless of chunk
+    # count, but its constant ring perm transmits garbage during pipeline
+    # fill/drain ((K + n - 2)/K x the useful bytes). The unrolled schedule
+    # executor sends EXACTLY the schedule's transfers. Use the exact one
+    # while its HLO stays small; fall back to fused for huge round counts.
+    if algo == "pipelined_chain" and fused and (num_chunks + n - 2) > 256:
+        return pipelined_chain_fused(buf, axis_name, root=root)
+    if algo in ("pipelined_chain", "bidir_chain"):
+        sched = build(algo, n, root, num_chunks=num_chunks, **algo_kw)
+    elif algo == "scatter_allgather":
+        if num_chunks != n:
+            raise ValueError(f"scatter_allgather wants num_chunks == n ({n}), got {num_chunks}")
+        sched = build(algo, n, root, **algo_kw)
+    else:
+        if num_chunks != 1:
+            # whole-message algorithms view the buffer as one chunk
+            buf2 = buf.reshape(1, -1)
+            out = schedule_bcast(buf2, axis_name, algo=algo, root=root, fused=fused, **algo_kw)
+            return out.reshape(buf.shape)
+        sched = build(algo, n, root, **algo_kw)
+    return execute_schedule(sched, buf, axis_name)

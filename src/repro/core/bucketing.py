@@ -1,0 +1,94 @@
+"""Pytree <-> communication-bucket packing.
+
+DL frameworks never broadcast tensors one by one: parameters are flattened
+and coalesced into fixed-budget, same-dtype buckets (CNTK "divides the
+communication based on the process count", paper Sec. V-D). The bucket mix —
+a few huge buffers plus a tail of small ones — is exactly the message-size
+spectrum the tuning framework exists for.
+
+Pure-jnp packing so it composes with jit/shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BucketSpec", "pack_buckets", "unpack_buckets"]
+
+
+@dataclasses.dataclass(frozen=True)
+class _LeafMeta:
+    index: int          # position in tree_flatten order
+    shape: tuple
+    dtype: Any
+    bucket: int         # which bucket it landed in
+    offset: int         # element offset within the bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    treedef: Any
+    leaves: tuple  # of _LeafMeta
+    bucket_sizes: tuple[int, ...]     # elements per bucket
+    bucket_dtypes: tuple[Any, ...]
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    def bucket_bytes(self) -> list[int]:
+        return [
+            int(s) * np.dtype(d).itemsize
+            for s, d in zip(self.bucket_sizes, self.bucket_dtypes)
+        ]
+
+
+def plan_buckets(tree: Any, bucket_bytes: int = 4 << 20) -> BucketSpec:
+    """Greedy same-dtype bucketing in tree_flatten order (deterministic)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    metas: list[_LeafMeta] = []
+    sizes: list[int] = []
+    dtypes: list[Any] = []
+    open_bucket: dict[Any, int] = {}  # dtype -> bucket idx still below budget
+    for i, leaf in enumerate(leaves):
+        dt = jnp.asarray(leaf).dtype
+        nelem = int(np.prod(leaf.shape)) if leaf.shape else 1
+        itemsize = np.dtype(dt).itemsize
+        b = open_bucket.get(dt)
+        if b is None or (sizes[b] + nelem) * itemsize > bucket_bytes:
+            b = len(sizes)
+            sizes.append(0)
+            dtypes.append(dt)
+            open_bucket[dt] = b
+        metas.append(_LeafMeta(i, tuple(leaf.shape), dt, b, sizes[b]))
+        sizes[b] += nelem
+    return BucketSpec(treedef, tuple(metas), tuple(sizes), tuple(dtypes))
+
+
+def pack_buckets(tree: Any, spec: BucketSpec) -> list[jax.Array]:
+    """Flatten + concatenate leaves into their buckets."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    parts: list[list[jax.Array]] = [[] for _ in range(spec.num_buckets)]
+    for meta in spec.leaves:
+        parts[meta.bucket].append(jnp.ravel(leaves[meta.index]))
+    out = []
+    for b, chunks in enumerate(parts):
+        if chunks:
+            out.append(jnp.concatenate(chunks) if len(chunks) > 1 else chunks[0])
+        else:
+            out.append(jnp.zeros((0,), spec.bucket_dtypes[b]))
+    return out
+
+
+def unpack_buckets(buckets: list[jax.Array], spec: BucketSpec) -> Any:
+    """Inverse of :func:`pack_buckets`."""
+    leaves: list[Any] = [None] * len(spec.leaves)
+    for meta in spec.leaves:
+        nelem = int(np.prod(meta.shape)) if meta.shape else 1
+        flat = jax.lax.dynamic_slice_in_dim(buckets[meta.bucket], meta.offset, nelem)
+        leaves[meta.index] = flat.reshape(meta.shape)
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)

@@ -1,0 +1,306 @@
+"""Static broadcast/reduce schedule generation.
+
+A *schedule* is the algorithm-level description of a collective: an ordered
+tuple of rounds, where every transfer inside one round happens concurrently
+(disjoint destinations -> one ``lax.ppermute`` per round) and rounds are
+serialized by data dependency.
+
+The same schedule objects drive three consumers:
+
+  * ``core.algorithms``   — the shard_map/ppermute executor (JAX, on device)
+  * ``core.simulator``    — a pure-numpy step simulator used for property tests
+  * ``core.cost_model``   — round-count / bytes-on-wire accounting
+
+This mirrors the paper's framing (Sec. III/IV): the algorithm is a schedule of
+point-to-point sends; the runtime then maps it onto the fabric.
+
+Chunks: the message is viewed as ``num_chunks`` equal chunks. Whole-message
+algorithms use ``num_chunks == 1``. A transfer moves the contiguous chunk
+range ``[chunk_start, chunk_start + chunk_count)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Tuple
+
+__all__ = [
+    "Transfer",
+    "Round",
+    "Schedule",
+    "direct",
+    "chain",
+    "pipelined_chain",
+    "binomial",
+    "knomial",
+    "scatter_allgather",
+    "binomial_reduce",
+    "ALGORITHMS",
+    "build",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """One point-to-point send of a contiguous chunk range."""
+
+    src: int
+    dst: int
+    chunk_start: int = 0
+    chunk_count: int = 1
+
+    def chunks(self) -> range:
+        return range(self.chunk_start, self.chunk_start + self.chunk_count)
+
+
+@dataclasses.dataclass(frozen=True)
+class Round:
+    """Transfers that are issued concurrently (one ppermute)."""
+
+    transfers: Tuple[Transfer, ...]
+
+    def __post_init__(self):
+        dsts = [t.dst for t in self.transfers]
+        if len(dsts) != len(set(dsts)):
+            raise ValueError(f"duplicate destination in round: {self.transfers}")
+        counts = {t.chunk_count for t in self.transfers}
+        if len(counts) > 1:
+            raise ValueError(
+                "transfers within one round must move equal-sized ranges "
+                f"(got counts {sorted(counts)})"
+            )
+
+    @property
+    def chunk_count(self) -> int:
+        return self.transfers[0].chunk_count if self.transfers else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A full collective schedule."""
+
+    name: str
+    n: int
+    root: int
+    num_chunks: int
+    rounds: Tuple[Round, ...]
+    # 'bcast' or 'reduce' (reduce combines into dst instead of overwriting)
+    kind: str = "bcast"
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+    def wire_chunks(self) -> int:
+        """Total chunk-transfers on the wire (bandwidth accounting)."""
+        return sum(t.chunk_count for r in self.rounds for t in r.transfers)
+
+    def validate_ranks(self) -> None:
+        for r in self.rounds:
+            for t in r.transfers:
+                if not (0 <= t.src < self.n and 0 <= t.dst < self.n):
+                    raise ValueError(f"rank out of range in {t} (n={self.n})")
+                if t.src == t.dst:
+                    raise ValueError(f"self-send in {t}")
+                if not (0 <= t.chunk_start and t.chunk_start + t.chunk_count <= self.num_chunks):
+                    raise ValueError(f"chunk range out of bounds in {t}")
+
+
+def _rot(rank: int, root: int, n: int) -> int:
+    """Relabel logical rank (root-relative) to physical rank."""
+    return (rank + root) % n
+
+
+# ---------------------------------------------------------------------------
+# Fundamental algorithms (paper Sec. III-A)
+# ---------------------------------------------------------------------------
+
+
+def direct(n: int, root: int = 0) -> Schedule:
+    """Eq. 1 — serialized loop of root -> i sends of the whole message."""
+    rounds = tuple(
+        Round((Transfer(root, _rot(i, root, n)),)) for i in range(1, n)
+    )
+    return Schedule("direct", n, root, 1, rounds)
+
+
+def chain(n: int, root: int = 0) -> Schedule:
+    """Eq. 2 — chain without wrap-around; whole message per hop."""
+    rounds = tuple(
+        Round((Transfer(_rot(i - 1, root, n), _rot(i, root, n)),))
+        for i in range(1, n)
+    )
+    return Schedule("chain", n, root, 1, rounds)
+
+
+def pipelined_chain(n: int, root: int = 0, num_chunks: int = 8) -> Schedule:
+    """Eq. 5 — THE paper's proposed design.
+
+    The root pushes chunks down the chain; every interior process forwards
+    chunk ``c`` one round after receiving it. Round ``s`` carries chunk
+    ``s - j`` over edge ``j -> j+1`` (logical ranks). Total rounds:
+    ``num_chunks + n - 2``.
+    """
+    if n == 1:
+        return Schedule("pipelined_chain", n, root, num_chunks, ())
+    rounds = []
+    for s in range(num_chunks + n - 2):
+        transfers = []
+        for j in range(n - 1):  # edge j -> j+1
+            c = s - j
+            if 0 <= c < num_chunks:
+                transfers.append(
+                    Transfer(_rot(j, root, n), _rot(j + 1, root, n), c, 1)
+                )
+        if transfers:
+            rounds.append(Round(tuple(transfers)))
+    return Schedule("pipelined_chain", n, root, num_chunks, tuple(rounds))
+
+
+def knomial(n: int, root: int = 0, k: int = 2) -> Schedule:
+    """Eq. 3 — k-nomial tree. ``k == 2`` is the binomial tree.
+
+    Logical round ``t`` (t = 0.. ceil(log_k n)-1): every rank that already has
+    the data (logical rank < k**t) sends to ranks ``r + j * k**t`` for
+    j = 1..k-1. The j-loop is serialized into sub-rounds (a parent has one
+    egress port), matching MPI implementations; for k == 2 this coincides
+    with the paper's Eq. 3 round count exactly.
+    """
+    if k < 2:
+        raise ValueError("k must be >= 2")
+    rounds = []
+    span = 1  # k**t
+    while span < n:
+        for j in range(1, k):
+            transfers = []
+            for r in range(span):
+                dst = r + j * span
+                if dst < n:
+                    transfers.append(Transfer(_rot(r, root, n), _rot(dst, root, n)))
+            if transfers:
+                rounds.append(Round(tuple(transfers)))
+        span *= k
+    return Schedule(f"knomial{k}", n, root, 1, tuple(rounds))
+
+
+def binomial(n: int, root: int = 0) -> Schedule:
+    sched = knomial(n, root, k=2)
+    return dataclasses.replace(sched, name="binomial")
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def scatter_allgather(n: int, root: int = 0) -> Schedule:
+    """Eq. 4 — binomial-tree scatter + ring allgather (bandwidth-optimal).
+
+    Requires power-of-two ``n`` (as the paper's model assumes). The message is
+    split into ``n`` chunks; after the scatter, logical rank ``r`` owns chunk
+    ``r``; the ring then circulates chunks for ``n - 1`` rounds.
+    """
+    if not _is_pow2(n):
+        raise ValueError(f"scatter_allgather requires power-of-two n, got {n}")
+    if n == 1:
+        return Schedule("scatter_allgather", n, root, 1, ())
+    rounds = []
+    # Phase 1: recursive-halving scatter. Owner of block [lo, lo+size) sends
+    # the upper half to rank lo + size/2.
+    size = n
+    while size > 1:
+        half = size // 2
+        transfers = []
+        for lo in range(0, n, size):
+            transfers.append(
+                Transfer(_rot(lo, root, n), _rot(lo + half, root, n), lo + half, half)
+            )
+        rounds.append(Round(tuple(transfers)))
+        size = half
+    # Phase 2: ring allgather. Round s: logical rank r sends chunk (r - s) mod n
+    # to (r + 1) mod n.
+    for s in range(n - 1):
+        transfers = []
+        for r in range(n):
+            c = (r - s) % n
+            transfers.append(Transfer(_rot(r, root, n), _rot((r + 1) % n, root, n), c, 1))
+        rounds.append(Round(tuple(transfers)))
+    return Schedule("scatter_allgather", n, root, n, tuple(rounds))
+
+
+def bidirectional_chain(n: int, root: int = 0, num_chunks: int = 8) -> Schedule:
+    """BEYOND-PAPER: bidirectional pipelined chain.
+
+    TPU ICI links are full-duplex: the root streams ALL chunks down a
+    rightward chain serving logical ranks 1..ceil((n-1)/2) and, concurrently,
+    down a leftward chain serving the rest. Each chunk reaches the farthest
+    rank in ~(n-1)/2 hops instead of n-1, so the round count drops from
+    (M/C + n - 2) to (M/C + ceil((n-1)/2) - 1) — it halves the latency term
+    of Eq. 5 while keeping the bandwidth term (both directions carry the
+    full message, on disjoint links). The executor issues the two directions
+    as separate ppermute lanes within one round.
+    """
+    if n <= 2:
+        return dataclasses.replace(
+            pipelined_chain(n, root, num_chunks), name="bidir_chain"
+        )
+    n_right = (n - 1 + 1) // 2          # logical ranks 1..n_right
+    n_left = n - 1 - n_right            # logical ranks n-1 .. n_right+1
+    rounds = []
+    s = 0
+    while True:
+        transfers = []
+        for j in range(n_right):        # right edge j -> j+1, chunk s-j
+            c = s - j
+            if 0 <= c < num_chunks:
+                transfers.append(Transfer(_rot(j, root, n), _rot(j + 1, root, n), c, 1))
+        for j in range(n_left):         # left edge -j -> -(j+1), chunk s-j
+            c = s - j
+            if 0 <= c < num_chunks:
+                transfers.append(
+                    Transfer(_rot(-j, root, n), _rot(-(j + 1), root, n), c, 1)
+                )
+        if not transfers:
+            break
+        rounds.append(Round(tuple(transfers)))
+        s += 1
+    return Schedule("bidir_chain", n, root, num_chunks, tuple(rounds))
+
+
+# ---------------------------------------------------------------------------
+# Reduce (paper Sec. VII future work — we provide it for the bcast-sync
+# trainer: reduce-to-root is the mirror image of the binomial bcast)
+# ---------------------------------------------------------------------------
+
+
+def binomial_reduce(n: int, root: int = 0) -> Schedule:
+    """Reduce-to-root: the binomial bcast schedule reversed, with src/dst
+    swapped. Transfers in a round are combined (summed) into the destination."""
+    fwd = binomial(n, root)
+    rounds = tuple(
+        Round(tuple(Transfer(t.dst, t.src, t.chunk_start, t.chunk_count) for t in r.transfers))
+        for r in reversed(fwd.rounds)
+    )
+    return Schedule("binomial_reduce", n, root, 1, rounds, kind="reduce")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ALGORITHMS: dict[str, Callable[..., Schedule]] = {
+    "direct": direct,
+    "chain": chain,
+    "pipelined_chain": pipelined_chain,
+    "bidir_chain": bidirectional_chain,
+    "binomial": binomial,
+    "knomial": knomial,
+    "scatter_allgather": scatter_allgather,
+}
+
+
+def build(name: str, n: int, root: int = 0, **kw) -> Schedule:
+    if name not in ALGORITHMS:
+        raise KeyError(f"unknown algorithm {name!r}; have {sorted(ALGORITHMS)}")
+    sched = ALGORITHMS[name](n, root, **kw)
+    sched.validate_ranks()
+    return sched

@@ -1,0 +1,106 @@
+"""Pure-numpy schedule simulator.
+
+Executes a :class:`core.schedules.Schedule` on host arrays, enforcing the
+causality invariant the real fabric enforces: a rank may only send chunks it
+already owns at the *start* of the round. Used by the hypothesis property
+tests and by the cost model's round-accurate timing estimate.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .schedules import Schedule
+
+
+class CausalityError(AssertionError):
+    pass
+
+
+def simulate_bcast(schedule: Schedule, data: Sequence[np.ndarray]) -> list[np.ndarray]:
+    """Run a bcast schedule over per-rank buffers.
+
+    ``data[r]`` is rank r's initial buffer with shape (num_chunks, chunk).
+    Returns final per-rank buffers. Raises :class:`CausalityError` if any
+    rank sends a chunk before owning it.
+    """
+    n, root = schedule.n, schedule.root
+    bufs = [np.array(d, copy=True) for d in data]
+    owned = [set() for _ in range(n)]
+    owned[root] = set(range(schedule.num_chunks))
+    for ridx, rnd in enumerate(schedule.rounds):
+        # snapshot ownership: all transfers in a round are concurrent.
+        pre = [set(o) for o in owned]
+        staged = []
+        for t in rnd.transfers:
+            for c in t.chunks():
+                if c not in pre[t.src]:
+                    raise CausalityError(
+                        f"{schedule.name}: round {ridx}: rank {t.src} sends chunk "
+                        f"{c} before owning it ({t})"
+                    )
+            staged.append((t, bufs[t.src][t.chunk_start : t.chunk_start + t.chunk_count].copy()))
+        for t, payload in staged:
+            bufs[t.dst][t.chunk_start : t.chunk_start + t.chunk_count] = payload
+            owned[t.dst].update(t.chunks())
+    return bufs
+
+
+def simulate_reduce(schedule: Schedule, data: Sequence[np.ndarray]) -> list[np.ndarray]:
+    """Run a reduce-to-root schedule (sum combiner).
+
+    Every rank starts owning its own contribution; a transfer accumulates the
+    sender's current partial sum into the receiver. At the end, ``root``
+    holds sum(data).
+    """
+    if schedule.kind != "reduce":
+        raise ValueError("schedule is not a reduce schedule")
+    bufs = [np.array(d, copy=True) for d in data]
+    alive = [True] * schedule.n  # a rank's partial may be consumed only once
+    for ridx, rnd in enumerate(schedule.rounds):
+        staged = []
+        for t in rnd.transfers:
+            if not alive[t.src]:
+                raise CausalityError(
+                    f"{schedule.name}: round {ridx}: rank {t.src} already merged ({t})"
+                )
+            staged.append((t, bufs[t.src].copy()))
+        for t, payload in staged:
+            bufs[t.dst] = bufs[t.dst] + payload
+            alive[t.src] = False
+    return bufs
+
+
+def check_complete(schedule: Schedule) -> None:
+    """Assert every rank ends up owning every chunk (bcast completeness)."""
+    n = schedule.n
+    chunk = 1
+    data = [np.full((schedule.num_chunks, chunk), -1.0) for _ in range(n)]
+    data[schedule.root] = np.arange(schedule.num_chunks, dtype=np.float64).reshape(
+        schedule.num_chunks, chunk
+    )
+    out = simulate_bcast(schedule, data)
+    want = data[schedule.root]
+    for r in range(n):
+        if not np.array_equal(out[r], want):
+            missing = [c for c in range(schedule.num_chunks) if out[r][c, 0] != want[c, 0]]
+            raise AssertionError(
+                f"{schedule.name}: rank {r} incomplete after schedule; missing chunks {missing}"
+            )
+
+
+def timed_rounds(schedule: Schedule, chunk_bytes: int, ts: float, bw: float) -> float:
+    """Round-accurate time estimate: each round costs ts + (bytes of the
+    largest transfer in the round)/bw; rounds serialize.
+
+    This is the 'simulator clock' the closed-form models in cost_model.py
+    approximate; property tests assert they agree on the canonical cases.
+    """
+    total = 0.0
+    for rnd in schedule.rounds:
+        if not rnd.transfers:
+            continue
+        biggest = max(t.chunk_count for t in rnd.transfers) * chunk_bytes
+        total += ts + biggest / bw
+    return total

@@ -1,0 +1,199 @@
+"""The collective tuning framework (paper Sec. IV-B/IV-C, "MV2-GDR-Opt").
+
+Selects a broadcast algorithm and chunk size per (message size, rank count,
+path class), the way MVAPICH2-GDR's tuning tables do. Two sources combine:
+
+  * the analytic cost models (Eqs. 1-6) with the target Hardware constants —
+    always available;
+  * an optional *empirical table*, keyed by (n, log2-size bucket), produced by
+    the calibration benchmark on real devices and persisted as JSON. Empirical
+    entries override the analytic choice inside their bucket (the paper
+    "experimentally determines the optimal chunk size").
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Callable, Iterable, Sequence
+
+from . import cost_model
+from .cost_model import Hardware, TPU_V5E
+
+__all__ = ["Decision", "Tuner", "default_tuner"]
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """A tuning decision for one (M, n) point."""
+
+    algo: str
+    num_chunks: int
+    chunk_bytes: int
+    predicted_s: float
+    source: str  # 'analytic' | 'empirical'
+
+
+# algorithms the executor can run, with practical applicability predicates
+_CANDIDATES: dict[str, Callable[[int, int], bool]] = {
+    "direct": lambda M, n: n <= 4,
+    "chain": lambda M, n: True,
+    "binomial": lambda M, n: True,
+    "knomial": lambda M, n: n >= 8,
+    "scatter_allgather": lambda M, n: _is_pow2(n) and n >= 4 and M >= 4 * n,
+    "pipelined_chain": lambda M, n: n >= 3 and M >= 4 * n,
+    # beyond-paper bidirectional chain (full-duplex ICI)
+    "bidir_chain": lambda M, n: n >= 4 and M >= 8 * n,
+}
+
+
+class Tuner:
+    def __init__(
+        self,
+        hw: Hardware = TPU_V5E,
+        *,
+        max_chunks: int = 64,
+        knomial_k: int = 4,
+        allow: Sequence[str] | None = None,
+        table: dict | None = None,
+    ):
+        self.hw = hw
+        self.max_chunks = max_chunks
+        self.knomial_k = knomial_k
+        self.allow = tuple(allow) if allow is not None else tuple(_CANDIDATES)
+        # empirical table: {f"{n}:{bucket}": {"algo":..., "num_chunks":...}}
+        self.table = dict(table or {})
+
+    # -- analytic path ------------------------------------------------------
+
+    def _analytic(self, M: int, n: int, inter_pod: bool) -> Decision:
+        B = self.hw.path_bw(inter_pod)
+        best: tuple[float, str, int] | None = None
+        for algo in self.allow:
+            if algo not in _CANDIDATES or not _CANDIDATES[algo](M, n):
+                continue
+            if algo == "pipelined_chain":
+                c_star = cost_model.optimal_chunk_bytes(M, n, self.hw, B)
+                num_chunks = max(1, min(self.max_chunks, math.ceil(M / c_star)))
+                c_eff = math.ceil(M / num_chunks)
+                t = cost_model.t_pipelined_chain(M, n, self.hw, B, C=c_eff)
+            elif algo == "bidir_chain":
+                hops = (n - 1 + 1) // 2
+                c_star = cost_model.optimal_chunk_bytes(M, hops + 1, self.hw, B)
+                num_chunks = max(1, min(self.max_chunks, math.ceil(M / c_star)))
+                t = cost_model.t_bidir_chain(M, n, self.hw, B, C=math.ceil(M / num_chunks))
+            elif algo == "knomial":
+                t = cost_model.t_knomial(M, n, self.hw, B, k=self.knomial_k)
+                num_chunks = 1
+            elif algo == "scatter_allgather":
+                t = cost_model.t_scatter_allgather(M, n, self.hw, B)
+                num_chunks = n
+            else:
+                t = cost_model.cost(algo, M, n, self.hw, inter_pod=inter_pod)
+                num_chunks = 1
+            if best is None or t < best[0]:
+                best = (t, algo, num_chunks)
+        assert best is not None, "no applicable algorithm (allow list too strict?)"
+        t, algo, num_chunks = best
+        return Decision(algo, num_chunks, math.ceil(M / num_chunks), t, "analytic")
+
+    # -- empirical table ----------------------------------------------------
+
+    @staticmethod
+    def _bucket(M: int) -> int:
+        return max(0, int(math.log2(max(M, 1))))
+
+    def _key(self, M: int, n: int, inter_pod: bool) -> str:
+        return f"{n}:{self._bucket(M)}:{int(inter_pod)}"
+
+    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False) -> None:
+        key = self._key(M, n, inter_pod)
+        prev = self.table.get(key)
+        if prev is None or measured_s < prev["measured_s"]:
+            self.table[key] = {
+                "algo": algo,
+                "num_chunks": num_chunks,
+                "measured_s": measured_s,
+            }
+
+    def calibrate(
+        self,
+        measure: Callable[[str, int, int, int], float],
+        sizes: Iterable[int],
+        n: int,
+        *,
+        inter_pod: bool = False,
+    ) -> None:
+        """Populate the table: ``measure(algo, M, n, num_chunks) -> seconds``."""
+        for M in sizes:
+            for algo in self.allow:
+                if not _CANDIDATES.get(algo, lambda *_: False)(M, n):
+                    continue
+                if algo == "pipelined_chain":
+                    chunk_opts = sorted(
+                        {
+                            max(1, min(self.max_chunks, math.ceil(M / c)))
+                            for c in (M, M // 4, M // 16, M // 64)
+                            if c and c > 0
+                        }
+                    )
+                else:
+                    chunk_opts = [n if algo == "scatter_allgather" else 1]
+                for k in chunk_opts:
+                    t = measure(algo, M, n, k)
+                    self.record(M, n, algo, k, t, inter_pod=inter_pod)
+
+    # -- public -------------------------------------------------------------
+
+    def select(self, M: int, n: int, *, inter_pod: bool = False) -> Decision:
+        if n <= 1:
+            return Decision("noop", 1, max(M, 1), 0.0, "analytic")
+        hit = self.table.get(self._key(M, n, inter_pod))
+        if hit is not None:
+            return Decision(
+                hit["algo"],
+                int(hit["num_chunks"]),
+                math.ceil(M / max(1, int(hit["num_chunks"]))),
+                float(hit["measured_s"]),
+                "empirical",
+            )
+        return self._analytic(M, n, inter_pod)
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        payload = {
+            "hw": self.hw.name,
+            "max_chunks": self.max_chunks,
+            "knomial_k": self.knomial_k,
+            "table": self.table,
+        }
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str, hw: Hardware = TPU_V5E) -> "Tuner":
+        with open(path) as f:
+            payload = json.load(f)
+        return cls(
+            hw,
+            max_chunks=payload.get("max_chunks", 64),
+            knomial_k=payload.get("knomial_k", 4),
+            table=payload.get("table", {}),
+        )
+
+
+_DEFAULT: Tuner | None = None
+
+
+def default_tuner() -> Tuner:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Tuner(TPU_V5E)
+    return _DEFAULT

@@ -1,0 +1,91 @@
+"""Deterministic, shardable data pipeline.
+
+Sources:
+  * SyntheticZipf — endless deterministic token stream (hash-of-step), the
+    default for benchmarks/smoke (no files needed, reproducible anywhere);
+  * MemmapTokens  — packed token file (one long int32 array), the "real
+    corpus" path used by examples (examples/make_corpus.py writes one).
+
+Both produce global ``{"tokens", "labels"}`` batches (labels = next token);
+the trainer device_puts them with the mesh's batch sharding. Multimodal
+archs get stub frontend embeddings appended (deterministic per step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+__all__ = ["SyntheticZipf", "MemmapTokens", "batches", "make_source"]
+
+
+class SyntheticZipf:
+    """Zipf-distributed tokens, deterministic in (seed, step)."""
+
+    def __init__(self, vocab: int, seed: int = 0, alpha: float = 1.1):
+        self.vocab = vocab
+        self.seed = seed
+        ranks = np.arange(1, vocab + 1, dtype=np.float64)
+        w = ranks ** (-alpha)
+        self.cdf = np.cumsum(w / w.sum())
+
+    def batch(self, step: int, batch: int, seq: int) -> np.ndarray:
+        rng = np.random.RandomState((self.seed * 1_000_003 + step) % (2**31))
+        u = rng.rand(batch, seq + 1)
+        return np.searchsorted(self.cdf, u).astype(np.int32)
+
+
+class MemmapTokens:
+    """Packed int32 token file; windows are deterministic in step."""
+
+    def __init__(self, path: str, seed: int = 0):
+        self.tokens = np.load(path, mmap_mode="r")
+        assert self.tokens.ndim == 1
+        self.seed = seed
+
+    @property
+    def vocab(self) -> int:
+        return int(self.tokens.max()) + 1
+
+    def batch(self, step: int, batch: int, seq: int) -> np.ndarray:
+        n = len(self.tokens) - (seq + 1)
+        rng = np.random.RandomState((self.seed * 9_176_923 + step) % (2**31))
+        starts = rng.randint(0, max(n, 1), size=batch)
+        return np.stack(
+            [np.asarray(self.tokens[s : s + seq + 1], np.int32) for s in starts]
+        )
+
+
+def make_source(cfg, *, path: Optional[str] = None, seed: int = 0):
+    if path:
+        return MemmapTokens(path, seed)
+    return SyntheticZipf(min(cfg.vocab_size, 32768), seed)
+
+
+def batches(source, cfg, *, batch: int, seq: int, start_step: int = 0) -> Iterator[dict]:
+    """Yield global batches. ``seq`` counts text tokens (the frontend prefix
+    for VLM archs is supplied separately as stub embeddings)."""
+    step = start_step
+    while True:
+        toks = source.batch(step, batch, seq)
+        out = {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+        if cfg.frontend == "vision":
+            rng = np.random.RandomState(step % (2**31))
+            out["embeds"] = jnp.asarray(
+                rng.randn(batch, cfg.prefix_len, cfg.d_model).astype(np.float32),
+                jnp.dtype(cfg.dtype),
+            )
+        elif cfg.arch_type == "encdec":
+            rng = np.random.RandomState(step % (2**31))
+            out["embeds"] = jnp.asarray(
+                rng.randn(batch, cfg.frontend_len, cfg.d_model).astype(np.float32),
+                jnp.dtype(cfg.dtype),
+            )
+        yield out
+        step += 1

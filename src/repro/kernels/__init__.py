@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical hot-spots:
+
+  chunked_copy     — pipelined HBM->VMEM->HBM staging copy (the paper's
+                     CUDA-kernel-copy analogue, used by the staged bcast path)
+  param_update     — fused model-average / scaled-add epilogue for bcast sync
+  flash_attention  — blocked online-softmax attention with block skipping
+
+Each kernel ships ops.py (jit'd wrapper, interpret on CPU / Mosaic on TPU)
+and ref.py (pure-jnp oracle used by the test sweeps).
+"""
+from . import ops, ref
+from .ops import chunked_copy, flash_attention, mix, scaled_add
+
+__all__ = ["ops", "ref", "chunked_copy", "flash_attention", "mix", "scaled_add"]

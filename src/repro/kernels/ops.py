@@ -1,0 +1,53 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels execute through the
+Pallas interpreter for correctness) and False on TPU (real Mosaic lowering).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .chunked_copy import chunked_copy as _chunked_copy
+from .flash_attention import flash_attention as _flash
+from .param_update import mix as _mix, scaled_add as _scaled_add
+
+__all__ = ["on_tpu", "chunked_copy", "mix", "scaled_add", "flash_attention"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def chunked_copy(x, *, chunk_elems: int = 64 * 1024, interpret: Optional[bool] = None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _chunked_copy(x, chunk_elems=chunk_elems, interpret=interpret)
+
+
+def mix(w, u, a, *, interpret: Optional[bool] = None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _mix(w, u, a, interpret=interpret)
+
+
+def scaled_add(w, u, a, *, interpret: Optional[bool] = None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _scaled_add(w, u, a, interpret=interpret)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: Optional[bool] = None,
+):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _flash(
+        q, k, v, causal=causal, window=window, prefix=prefix, bq=bq, bk=bk, interpret=interpret
+    )

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every kernel (the tests' ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_copy_ref", "mix_ref", "scaled_add_ref", "flash_attention_ref"]
+
+
+def chunked_copy_ref(x: jax.Array) -> jax.Array:
+    return jnp.array(x, copy=True)
+
+
+def mix_ref(w, u, a):
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    return ((1.0 - a) * wf + a * uf).astype(w.dtype)
+
+
+def scaled_add_ref(w, u, a):
+    return (w.astype(jnp.float32) - a * u.astype(jnp.float32)).astype(w.dtype)
+
+
+def flash_attention_ref(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None, prefix: int = 0
+):
+    """Unblocked softmax attention with the same mask semantics."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, T, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, k.astype(jnp.float32)) * hd**-0.5
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(S)[None, :]
+    if causal:
+        mask = j <= i
+        if prefix:
+            mask = mask | (j < prefix)
+    else:
+        mask = jnp.ones((T, S), bool)
+    if window is not None:
+        w_ok = j > i - window
+        if prefix:
+            w_ok = w_ok | ((j < prefix) & (i < prefix))
+        mask = mask & w_ok
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd).astype(q.dtype)

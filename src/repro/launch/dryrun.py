@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import (jax locks the device count on first
+# init). Only the dry-run gets 512 placeholder devices; tests/benches see 1.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh, print memory/cost analysis, and
+write the parsed roofline report JSON.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.roofline import analyze_compiled
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.configs.base import RunConfig
+from repro.dist.hints import activation_hints
+from repro.dist.sharding import batch_specs, cache_specs, param_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.optim.optimizers import get_optimizer
+from repro.optim.schedules import warmup_cosine
+from repro.train.train_step import make_train_step
+
+# Archs allowed to run long_500k (sub-quadratic stacks; see DESIGN.md Sec. 6)
+LONG_OK = {"xlstm-350m", "hymba-1.5b", "gemma3-27b", "mixtral-8x7b"}
+
+# Production overrides applied at lowering time (recorded in EXPERIMENTS.md):
+#   qwen1.5-32b decode: MHA KV cache (40 heads x 64 layers) needs f8 to fit
+#   a single v5e pod at 32k x 128.
+DECODE_OVERRIDES = {
+    "qwen1.5-32b": {"kv_cache_dtype": "float8_e5m2"},
+}
+
+# train_4k microbatching (grad accumulation) per arch size class, so
+# activations fit HBM with remat (see DESIGN.md Sec. 7).
+def microbatches(cfg) -> int:
+    big = cfg.d_model >= 4096 or cfg.num_layers >= 48
+    return 8 if big else 4
+
+
+def applicable(arch: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch in LONG_OK
+    return True
+
+
+def _sds(tree, specs, mesh):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+        tree,
+        specs,
+    )
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool, verbose: bool = True, seq_shard: bool = False, microbatch_override: int | None = None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.devices.size
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    if shape.mode == "decode" and arch in DECODE_OVERRIDES:
+        cfg = dataclasses.replace(cfg, **DECODE_OVERRIDES[arch])
+    model = Model(cfg)
+
+    params_shapes = model.param_shapes()
+    # FSDP for training; TP-only for serving (no per-step weight all-gather).
+    # Attention fallback for non-divisible heads: replicate for big-T steps,
+    # head_dim for single-token decode (see dist.sharding).
+    pspecs = param_specs(
+        params_shapes,
+        mesh,
+        fsdp=(shape.mode == "train"),
+        attn_fallback="head_dim" if shape.mode == "decode" else "replicate",
+    )
+    params_sds = _sds(params_shapes, pspecs, mesh)
+
+    with mesh, activation_hints(mesh, dp=("pod", "data"), tp="model", seq_shard=seq_shard):
+        if shape.mode == "train":
+            run = RunConfig(num_microbatches=microbatch_override or microbatches(cfg), remat=True)
+            opt = get_optimizer("adamw")
+            gspecs = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+            step = make_train_step(model, run, opt, warmup_cosine(3e-4, 100, 1000), grad_specs=gspecs)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+            opt_sds = _sds(opt_shapes, ospecs, mesh)
+            batch_shapes = model.input_specs(shape)
+            bspecs = batch_specs(batch_shapes, mesh)
+            batch_sds = _sds(batch_shapes, bspecs, mesh)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(params_sds, opt_sds, batch_sds)
+        elif shape.mode == "prefill":
+            batch_shapes = model.input_specs(shape)
+            bspecs = batch_specs(batch_shapes, mesh)
+            batch_sds = _sds(batch_shapes, bspecs, mesh)
+            fn = partial(model.prefill, max_len=shape.seq_len)
+            # output shardings matter: without them GSPMD replicates the
+            # returned KV caches (measured: 82 GiB/device on qwen1.5-32b)
+            out_shapes = jax.eval_shape(fn, params_shapes, batch_shapes)
+            logits_spec = P(tuple(a for a in mesh.axis_names if a != "model"), None, "model")
+            ospecs = (
+                logits_spec if out_shapes[0].shape[2] % 16 == 0 else P(logits_spec[0], None, None),
+                cache_specs(out_shapes[1], mesh, cfg),
+            )
+            out_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                                         is_leaf=lambda x: isinstance(x, P))
+            lowered = jax.jit(fn, out_shardings=out_shardings).lower(params_sds, batch_sds)
+        else:  # decode — serve_step: ONE token against a seq_len KV cache
+            specs = model.input_specs(shape)
+            cspecs = cache_specs(specs["caches"], mesh, cfg)
+            caches_sds = _sds(specs["caches"], cspecs, mesh)
+            tok_sds = jax.ShapeDtypeStruct(
+                specs["tokens"].shape,
+                specs["tokens"].dtype,
+                sharding=NamedSharding(mesh, batch_specs(specs["tokens"], mesh)),
+            )
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+            # NOTE: decode outputs deliberately have NO pinned shardings —
+            # pinning the output cache to the input specs forced GSPMD into
+            # resharding copies (measured: minitron decode collective term
+            # 0.85 ms -> 1289 ms). Donation still aliases the cache because
+            # propagation keeps the natural (= input) layout.
+            lowered = jax.jit(model.decode_step, donate_argnums=(2,)).lower(
+                params_sds, tok_sds, caches_sds, pos_sds
+            )
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    report = analyze_compiled(
+        compiled, arch=arch, shape=shape, mesh_name=mesh_name, chips=chips, cfg=cfg
+    )
+    row = report.row()
+    row["compile_s"] = compile_s
+    row["memory_analysis"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "peak_per_device_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 2**30,
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {mesh_name} ({chips} chips) ==")
+        print(f"  compile: {compile_s:.1f}s")
+        print(f"  memory_analysis: args {mem.argument_size_in_bytes/2**30:.2f} GiB  "
+              f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB  "
+              f"out {mem.output_size_in_bytes/2**30:.2f} GiB / device")
+        print(f"  cost_analysis(raw): flops/dev {report.xla_flops_dev:.3e} bytes/dev {report.xla_bytes_dev:.3e}")
+        print(f"  trip-corrected: flops/dev {report.dot_flops_dev:.3e}  hbm/dev {report.dot_bytes_dev:.3e}  wire/dev {report.wire_bytes_dev:.3e}")
+        print(f"  roofline: compute {report.t_compute*1e3:.2f}ms  memory {report.t_memory*1e3:.2f}ms  "
+              f"collective {report.t_collective*1e3:.2f}ms  -> {report.bottleneck}-bound")
+        print(f"  model_flops {report.model_flops_total:.3e}  useful_ratio {report.useful_flops_ratio:.3f}")
+        print(f"  collectives: {report.collective_counts}")
+        sys.stdout.flush()
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-parallel residual hints (S Perf pair 2)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not applicable(arch, shape):
+                print(f"-- skip {arch} x {shape} (long_500k: not sub-quadratic; see DESIGN.md)")
+                continue
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multipod' if mp else 'pod'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"-- cached {tag}")
+                    continue
+                try:
+                    row = lower_pair(arch, shape, multi_pod=mp, seq_shard=args.seq_shard, microbatch_override=args.microbatches)
+                    with open(path, "w") as f:
+                        json.dump(row, f, indent=1)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"!! FAIL {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        sys.exit(1)
+    print("\nALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

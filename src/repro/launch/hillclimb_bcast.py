@@ -1,0 +1,108 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ must precede jax import (see dryrun.py)
+
+"""Hillclimb pair 3 — the paper's own technique, measured from lowered HLO.
+
+Lowers the FULL param_bcast train step (xlstm-350m, train_4k tokens) on a
+pure data-parallel mesh for each broadcast algorithm, and reports the sync
+stage's collective footprint: wire bytes (bandwidth term) and collective op
+count x t_s (the launch/latency term the paper's small-message wins come
+from). 'xla_psum' is the one-shot NCCL-style baseline; 'pipelined_chain' is
+the paper's contribution; 'bidir_chain' is our beyond-paper variant.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb_bcast [--ranks 64]
+"""
+import argparse
+import json
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.roofline import analyze_compiled
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import RunConfig
+from repro.core.cost_model import TPU_V5E
+from repro.models import Model
+from repro.optim.optimizers import get_optimizer
+from repro.optim.schedules import warmup_cosine
+from repro.train.train_step import make_bcast_train_step
+
+
+def lower_algo(algo: str, *, ranks: int, seq: int, batch: int, bucket_mb: int):
+    mesh = jax.make_mesh((ranks,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = get_config("xlstm-350m")
+    model = Model(cfg)
+    run = RunConfig(
+        sync_mode="param_bcast",
+        bcast_algo=algo,
+        bcast_bucket_bytes=bucket_mb << 20,
+        num_microbatches=1,
+        remat=True,
+    )
+    opt = get_optimizer("adamw")
+    step = make_bcast_train_step(model, run, opt, warmup_cosine(3e-4, 100, 1000), mesh)
+
+    params_shapes = model.param_shapes()
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    repl = lambda tree: jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=NamedSharding(mesh, P())), tree
+    )
+    import jax.numpy as jnp
+
+    batch_sds = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                                       sharding=NamedSharding(mesh, P("data", None))),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                                       sharding=NamedSharding(mesh, P("data", None))),
+    }
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+            repl(params_shapes), repl(opt_shapes), batch_sds
+        )
+        compiled = lowered.compile()
+    rep = analyze_compiled(
+        compiled, arch="xlstm-350m", shape=INPUT_SHAPES["train_4k"], mesh_name=f"dp{ranks}",
+        chips=ranks, cfg=cfg,
+    )
+    ops = sum(rep.collective_counts.values())
+    mem = compiled.memory_analysis()
+    return {
+        "algo": algo,
+        "wire_bytes_dev": rep.wire_bytes_dev,
+        "t_bandwidth_ms": rep.t_collective * 1e3,
+        "collective_ops": ops,
+        "t_launch_ms": ops * TPU_V5E.ts * 1e3,
+        "t_sync_total_ms": rep.t_collective * 1e3 + ops * TPU_V5E.ts * 1e3,
+        "by_family": rep.wire_by_family,
+        "counts": rep.collective_counts,
+        "peak_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ranks", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--bucket-mb", type=int, default=2048)
+    ap.add_argument("--algos", default="xla_psum,binomial,pipelined_chain,bidir_chain,scatter_allgather,auto")
+    ap.add_argument("--out", default="experiments/hillclimb_bcast.json")
+    args = ap.parse_args()
+
+    rows = []
+    for algo in args.algos.split(","):
+        try:
+            row = lower_algo(algo, ranks=args.ranks, seq=args.seq, batch=args.batch,
+                             bucket_mb=args.bucket_mb)
+        except Exception as e:  # noqa: BLE001
+            row = {"algo": algo, "error": repr(e)[:300]}
+        rows.append(row)
+        print(json.dumps(row), flush=True)
+    with open(args.out, "w") as f:
+        json.dump({"ranks": args.ranks, "batch": args.batch, "seq": args.seq,
+                   "bucket_mb": args.bucket_mb, "rows": rows}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

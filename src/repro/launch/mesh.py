@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls this.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "dp_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Mesh over whatever devices exist (CPU smoke / small runs)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0, (n, model_parallel)
+    shape = (n // model_parallel, model_parallel)
+    return jax.make_mesh(
+        shape, ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+
+
+def dp_axes(mesh: jax.sharding.Mesh):
+    """The data-parallel axis (or axes) of a mesh: ('pod','data') when a pod
+    axis exists, else ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

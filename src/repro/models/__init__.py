@@ -1,0 +1,5 @@
+"""Composable model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM stacks."""
+from .model import Model
+from .transformer import StackLayout, apply_lm, init_decode_cache, init_lm
+
+__all__ = ["Model", "StackLayout", "apply_lm", "init_decode_cache", "init_lm"]

@@ -1,0 +1,93 @@
+"""Mixture-of-Experts FFN: GShard-style top-k dispatch with capacity.
+
+Formulation: tokens are grouped (B, nG, S); the router's top-k choices are
+turned into a (B, nG, S, E, C) combine tensor; expert inputs/outputs move
+through einsums so GSPMD shards experts on the `model` mesh axis (the
+all-to-all appears in the lowered HLO). Tokens overflowing an expert's
+capacity are dropped (residual passes through), as in GShard/Switch.
+
+Shared experts (DeepSeek/Moonlight style) run densely for every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _norm_init, down_proj
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, cfg, dtype=jnp.bfloat16):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _norm_init(ks[0], (d, E), d**-0.5, jnp.float32),
+        "w_gate": _norm_init(ks[1], (E, d, f), d**-0.5, dtype),
+        "w_up": _norm_init(ks[2], (E, d, f), d**-0.5, dtype),
+        "w_down": _norm_init(ks[3], (E, f, d), f**-0.5, dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": _norm_init(kss[0], (d, fs), d**-0.5, dtype),
+            "w_up": _norm_init(kss[1], (d, fs), d**-0.5, dtype),
+            "w_down": _norm_init(kss[2], (fs, d), fs**-0.5, dtype),
+        }
+    return p
+
+
+def _capacity(S: int, k: int, E: int, cf: float) -> int:
+    c = int(S * k * cf / E) + 1
+    return max(4, min(c, S * k)) if S > 1 else max(1, k)
+
+
+def moe_ffn(p, x, cfg):
+    """x: (B, T, D) -> (out, aux_loss)."""
+    B, T, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    S = min(cfg.moe_group_size, T)
+    assert T % S == 0, f"seq {T} not divisible by moe group {S}"
+    nG = T // S
+    xg = x.reshape(B, nG, S, D)
+
+    logits = jnp.einsum("bgsd,de->bgse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (B,nG,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )  # renormalize over the selected experts
+
+    C = _capacity(S, k, E, cfg.capacity_factor)
+    onehot_e = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (B,nG,S,k,E)
+    # position-in-expert: cumulative count over the flattened (S, k) order
+    flat = onehot_e.reshape(B, nG, S * k, E)
+    pos_in_e = (jnp.cumsum(flat, axis=2) - flat).reshape(B, nG, S, k, E)
+    pos_in_e = jnp.sum(pos_in_e * onehot_e, axis=-1)             # (B,nG,S,k)
+    keep = pos_in_e < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+    onehot_c = jax.nn.one_hot(pos_in_e.astype(jnp.int32), C, dtype=jnp.float32)
+
+    combine = jnp.einsum("bgske,bgsk,bgskc->bgsec", onehot_e, gate_vals, onehot_c)
+    dispatch = (combine > 0).astype(x.dtype)                     # (B,nG,S,E,C)
+    combine = combine.astype(x.dtype)
+
+    expert_in = jnp.einsum("bgsec,bgsd->ebgcd", dispatch, xg)
+    h = jax.nn.silu(jnp.einsum("ebgcd,edf->ebgcf", expert_in, p["w_gate"]))
+    h = h * jnp.einsum("ebgcd,edf->ebgcf", expert_in, p["w_up"])
+    expert_out = jnp.einsum(
+        "ebgcf,efd->ebgcd", h, p["w_down"], preferred_element_type=h.dtype
+    )
+    y = jnp.einsum("bgsec,ebgcd->bgsd", combine, expert_out).reshape(B, T, D)
+
+    if "shared" in p:
+        sp = p["shared"]
+        hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        y = y + down_proj(hs, sp["w_down"])
+
+    # GShard load-balancing auxiliary loss
+    me = jnp.mean(probs, axis=(0, 1, 2))                         # (E,)
+    ce = jnp.mean(onehot_e.sum(axis=3), axis=(0, 1, 2))          # fraction routed
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_coef
+    return y, aux

@@ -1,0 +1,122 @@
+"""Optimizers (from scratch, pytree-based): AdamW, SGD-momentum, Lion."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "sgdm", "lion", "get_optimizer", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params, lr) ->
+    (new_params, new_state). All pure; state['step'] is a scalar."""
+
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like_f32(params), "v": _zeros_like_f32(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mh = m / c1
+            vh = v / c2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer("adamw", init, update)
+
+
+def sgdm(momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like_f32(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m = momentum * m + gf
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return tdef.unflatten([o[0] for o in out]), {
+            "m": tdef.unflatten([o[1] for o in out]),
+            "step": state["step"] + 1,
+        }
+
+    return Optimizer("sgdm", init, update)
+
+
+def lion(b1: float = 0.9, b2: float = 0.99, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like_f32(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            gf = g.astype(jnp.float32)
+            u = jnp.sign(b1 * m + (1 - b1) * gf) + weight_decay * p.astype(jnp.float32)
+            m2 = b2 * m + (1 - b2) * gf
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return tdef.unflatten([o[0] for o in out]), {
+            "m": tdef.unflatten([o[1] for o in out]),
+            "step": state["step"] + 1,
+        }
+
+    return Optimizer("lion", init, update)
+
+
+def get_optimizer(name: str, weight_decay: float = 0.1) -> Optimizer:
+    if name == "adamw":
+        return adamw(weight_decay=weight_decay)
+    if name == "sgdm":
+        return sgdm(weight_decay=weight_decay)
+    if name == "lion":
+        return lion(weight_decay=weight_decay)
+    raise KeyError(name)

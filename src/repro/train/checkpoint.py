@@ -1,0 +1,83 @@
+"""Sharding-aware npz checkpointing (no external deps).
+
+Leaves are gathered to host, keyed by their flattened tree path; restore
+re-places them with the provided shardings. bf16 round-trips via a uint16
+view (npz has no native bfloat16).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_BF16_TAG = "__bf16__"
+
+
+def _key(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    for p, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        k = _key(p)
+        if arr.dtype == jnp.bfloat16:
+            arrays[k + _BF16_TAG] = arr.view(np.uint16)
+        else:
+            arrays[k] = arr
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez(fname, **arrays)
+    with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump({"step": step, **(extra or {})}, f)
+    return fname
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(f[len("ckpt_") : -len(".npz")])
+        for f in os.listdir(path)
+        if f.startswith("ckpt_") and f.endswith(".npz")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, step: int, like: Any, shardings: Any = None) -> Any:
+    """``like``: a tree (concrete or ShapeDtypeStruct) defining the structure.
+    ``shardings``: optional matching tree of NamedSharding for placement."""
+    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_flat = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(flat)
+    )
+    leaves = []
+    for (p, leaf), sh in zip(flat, shard_flat):
+        k = _key(p)
+        if k + _BF16_TAG in data:
+            arr = jnp.asarray(data[k + _BF16_TAG].view(jnp.bfloat16))
+        else:
+            arr = jnp.asarray(data[k])
+        assert arr.shape == leaf.shape, (k, arr.shape, leaf.shape)
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])

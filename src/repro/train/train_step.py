@@ -1,0 +1,172 @@
+"""Train-step factories.
+
+Two data-parallel synchronization modes (DESIGN.md Sec. 4):
+
+* ``grad_allreduce`` — the modern baseline: pjit/GSPMD inserts the gradient
+  all-reduce (and FSDP all-gathers/reduce-scatters) automatically. This is
+  the "vendor collective" path, analogous to NCCL allreduce.
+
+* ``param_bcast`` — the paper's CA-CNTK pattern as an explicit shard_map
+  program over the data-parallel axis: per-rank gradients are reduced to the
+  root with the reversed-binomial schedule, and the synchronized buffers are
+  then *broadcast* with the tuned algorithm library (pipelined chain et al.)
+  via ``core.bcast.pbcast_tree``. SPMD note recorded in DESIGN.md: we
+  broadcast the root's reduced gradient rather than the updated parameters —
+  byte-identical traffic and the same collective, but every rank can then
+  apply the optimizer deterministically, keeping per-rank optimizer state
+  coherent (CNTK keeps the optimizer on the root instead).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import RunConfig
+from ..core.algorithms import ring_allreduce
+from ..core.bcast import pbcast_tree, preduce_sum
+from ..core.tuner import Tuner
+from ..launch.mesh import dp_axes
+from ..optim.optimizers import Optimizer, clip_by_global_norm
+
+__all__ = ["make_train_step", "make_bcast_train_step"]
+
+
+def _microbatch(batch, k: int):
+    return jax.tree.map(lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+
+def _grad_fn(model, run_cfg: RunConfig, grad_specs=None):
+    def loss_fn(params, mb):
+        return model.loss(params, mb, remat=run_cfg.remat)
+
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain(tree):
+        if grad_specs is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_specs)
+
+    def compute(params, batch):
+        k = run_cfg.num_microbatches
+        if k == 1:
+            (loss, metrics), grads = vg(params, batch)
+            return loss, metrics, grads
+
+        def body(acc, mb):
+            (loss, metrics), grads = vg(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / k, acc, constrain(grads)
+            )
+            return constrain(acc), (loss, metrics)
+
+        zeros = constrain(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        )
+        grads, (losses, metricss) = jax.lax.scan(body, zeros, _microbatch(batch, k))
+        metrics = jax.tree.map(jnp.mean, metricss)
+        return jnp.mean(losses), metrics, grads
+
+    return compute
+
+
+def make_train_step(model, run_cfg: RunConfig, optimizer: Optimizer, lr_fn: Callable, grad_specs=None):
+    """pjit path: sharding comes from in/out shardings; collectives are
+    GSPMD-inserted (the baseline the paper's mode is compared against).
+    ``grad_specs``: optional NamedSharding tree pinning the f32 grad
+    accumulator to the parameter sharding (prevents a replicated buffer)."""
+    compute = _grad_fn(model, run_cfg, grad_specs)
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = lr_fn(opt_state["step"])
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out.update(metrics)
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_bcast_train_step(
+    model,
+    run_cfg: RunConfig,
+    optimizer: Optimizer,
+    lr_fn: Callable,
+    mesh,
+    *,
+    tuner: Tuner | None = None,
+    root: int = 0,
+):
+    """The paper's sync mode: explicit reduce-to-root + tuned broadcast over
+    the data axis. Requires a pure data-parallel mesh (model axis size 1) —
+    the setting of the paper (n GPUs, replicated model)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    assert axis_sizes.get("model", 1) == 1, "param_bcast mode is pure-DP (paper setting)"
+    dp = dp_axes(mesh)
+    assert len(dp) >= 1
+    compute = _grad_fn(model, run_cfg)
+    n_dp = 1
+    for a in dp:
+        n_dp *= axis_sizes[a]
+
+    def local_step(params, opt_state, batch):
+        # per-rank grads on the local shard of the batch
+        loss, metrics, grads = compute(params, batch)
+        if run_cfg.bcast_algo == "ring_allreduce":
+            # paper Sec. VII future work: the explicit bandwidth-optimal
+            # ring allreduce from the same ppermute substrate
+            for ax in dp:
+                grads = jax.tree.map(lambda g: ring_allreduce(g, ax), grads)
+            grads = jax.tree.map(lambda g: g / n_dp, grads)
+        else:
+            # --- the paper's collective sequence, bucketed & tuned ---
+            for ax in dp:
+                grads = jax.tree.map(lambda g: preduce_sum(g, ax, root=root), grads)
+            grads = jax.tree.map(lambda g: g / n_dp, grads)
+            for ax in reversed(dp):
+                grads = pbcast_tree(
+                    grads,
+                    ax,
+                    root=root,
+                    algo=run_cfg.bcast_algo,
+                    tuner=tuner,
+                    bucket_bytes=run_cfg.bcast_bucket_bytes,
+                    inter_pod=(ax == "pod"),
+                )
+        # deterministic, identical update on every rank
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = lr_fn(opt_state["step"])
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        loss = jax.lax.pmean(loss, dp)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out.update({k: jax.lax.pmean(v, dp) for k, v in metrics.items()})
+        return params, opt_state, out
+
+    replicated = P()
+
+    def batch_spec(x):
+        return P(dp, *([None] * (x.ndim - 1)))
+
+    def train_step(params, opt_state, batch):
+        in_specs = (
+            jax.tree.map(lambda _: replicated, params),
+            jax.tree.map(lambda _: replicated, opt_state),
+            jax.tree.map(batch_spec, batch),
+        )
+        out_specs = (
+            jax.tree.map(lambda _: replicated, params),
+            jax.tree.map(lambda _: replicated, opt_state),
+            replicated,
+        )
+        fn = jax.shard_map(
+            local_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+        return fn(params, opt_state, batch)
+
+    return train_step

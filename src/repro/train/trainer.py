@@ -1,0 +1,113 @@
+"""Trainer: wires model + data + optimizer + sync mode + checkpointing."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunConfig
+from ..data.pipeline import batches, make_source
+from ..dist.sharding import batch_specs, param_specs
+from ..launch.mesh import dp_axes, make_local_mesh
+from ..models import Model
+from ..optim.optimizers import get_optimizer
+from ..optim.schedules import warmup_cosine
+from . import checkpoint as ckpt_lib
+from .train_step import make_bcast_train_step, make_train_step
+
+__all__ = ["Trainer"]
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        run: RunConfig,
+        *,
+        mesh=None,
+        data_path: Optional[str] = None,
+        ckpt_dir: Optional[str] = None,
+    ):
+        self.cfg = cfg
+        self.run = run
+        self.model = Model(cfg)
+        self.mesh = mesh if mesh is not None else make_local_mesh(1)
+        self.optimizer = get_optimizer(run.optimizer, run.weight_decay)
+        self.lr_fn = warmup_cosine(run.learning_rate, run.warmup_steps, run.total_steps)
+        self.source = make_source(cfg, path=data_path, seed=run.seed)
+        self.ckpt_dir = ckpt_dir
+        self._build()
+
+    def _build(self):
+        mesh = self.mesh
+        if self.run.sync_mode == "param_bcast":
+            step_fn = make_bcast_train_step(
+                self.model, self.run, self.optimizer, self.lr_fn, mesh
+            )
+            self._pspecs = jax.tree.map(
+                lambda _: P(), self.model.param_shapes()
+            )
+        else:
+            step_fn = make_train_step(self.model, self.run, self.optimizer, self.lr_fn)
+            self._pspecs = param_specs(self.model.param_shapes(), mesh)
+        self._step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def init_state(self, seed: Optional[int] = None):
+        seed = self.run.seed if seed is None else seed
+        with jax.set_mesh(self.mesh) if hasattr(jax, "set_mesh") else self.mesh:
+            params = jax.jit(
+                self.model.init,
+                out_shardings=jax.tree.map(lambda s: NamedSharding(self.mesh, s), self._pspecs),
+            )(jax.random.PRNGKey(seed))
+            opt_state = jax.jit(
+                self.optimizer.init,
+            )(params)
+        return params, opt_state
+
+    def restore_or_init(self):
+        if self.ckpt_dir:
+            step = ckpt_lib.latest_step(self.ckpt_dir)
+            if step is not None:
+                params_like = self.model.param_shapes()
+                params = ckpt_lib.restore_checkpoint(self.ckpt_dir, step, params_like)
+                opt_like = jax.eval_shape(self.optimizer.init, params_like)
+                opt = ckpt_lib.restore_checkpoint(
+                    self.ckpt_dir + "/opt", step, opt_like
+                )
+                return params, opt, step
+        params, opt = self.init_state()
+        return params, opt, 0
+
+    def train(self, *, batch: int, seq: int, steps: int, log_every: int = 10, ckpt_every: int = 0):
+        params, opt_state, start = self.restore_or_init()
+        it = batches(self.source, self.cfg, batch=batch, seq=seq, start_step=start)
+        bspecs = None
+        history = []
+        t0 = time.time()
+        with self.mesh:
+            for step in range(start, start + steps):
+                b = next(it)
+                if bspecs is None:
+                    bspecs = batch_specs(b, self.mesh)
+                b = jax.tree.map(
+                    lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)), b, bspecs
+                )
+                params, opt_state, metrics = self._step_fn(params, opt_state, b)
+                if log_every and (step % log_every == 0 or step == start + steps - 1):
+                    m = {k: float(v) for k, v in metrics.items()}
+                    dt = time.time() - t0
+                    history.append({"step": step, "time_s": dt, **m})
+                    print(
+                        f"step {step:6d} loss {m['loss']:.4f} nll {m.get('nll', 0.0):.4f} "
+                        f"gnorm {m['grad_norm']:.2f} lr {m['lr']:.2e} ({dt:.1f}s)",
+                        flush=True,
+                    )
+                if ckpt_every and self.ckpt_dir and (step + 1) % ckpt_every == 0:
+                    ckpt_lib.save_checkpoint(self.ckpt_dir, step + 1, params)
+                    ckpt_lib.save_checkpoint(self.ckpt_dir + "/opt", step + 1, opt_state)
+        return params, opt_state, history

@@ -1,0 +1,108 @@
+"""Analytic model sanity (Eqs. 1-6) + tuner behaviour."""
+from __future__ import annotations
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.tuner import Tuner
+
+HW = cm.TPU_V5E
+B = HW.link_bw
+
+
+def test_regimes():
+    """Paper Sec. V: trees win small messages, pipelined chain / scatter-
+    allgather win large messages."""
+    n = 16
+    small, large = 1024, 256 << 20
+    assert cm.cost("binomial", small, n) < cm.cost("chain", small, n)
+    assert cm.cost("binomial", small, n) < cm.cost("pipelined_chain", small, n)
+    assert cm.cost("pipelined_chain", large, n) < cm.cost("binomial", large, n)
+    assert cm.cost("scatter_allgather", large, n) < cm.cost("binomial", large, n)
+    # pipelined chain approaches the bandwidth bound M/B for large M
+    t = cm.cost("pipelined_chain", large, n)
+    assert t < 2.2 * large / B
+
+
+def test_direct_worst_at_scale():
+    for M in (1024, 1 << 20):
+        assert cm.cost("direct", M, 32) > cm.cost("binomial", M, 32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(M=st.integers(1 << 14, 1 << 28), n=st.integers(3, 64))
+def test_optimal_chunk_is_near_optimal(M, n):
+    """C* (continuous minimizer) is within 2x of the best DISCRETE chunking
+    over a wide scan — ceil(M/C) quantization makes exact local optimality
+    false, but the closed form must stay competitive."""
+    c_star = cm.optimal_chunk_bytes(M, n, HW, B)
+    t_star = cm.t_pipelined_chain(M, n, HW, B, C=c_star)
+    best = min(
+        cm.t_pipelined_chain(M, n, HW, B, C=max(M / k, 1.0))
+        for k in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+    )
+    assert t_star <= 2.0 * best
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=st.integers(1, 1 << 24), n=st.integers(2, 128))
+def test_monotone_in_message_size(M, n):
+    for algo in ("chain", "binomial", "pipelined_chain", "scatter_allgather"):
+        if algo == "scatter_allgather" and (n & (n - 1)):
+            continue
+        assert cm.cost(algo, M, n) <= cm.cost(algo, 2 * M, n) + 1e-12
+
+
+def test_host_staging_tradeoff():
+    """Eq. 6: staging only pays off when M/B_host is small vs the tree."""
+    n = 16
+    assert cm.cost("knomial_staged", 256 << 20, n) > cm.cost("pipelined_chain", 256 << 20, n)
+
+
+def test_interpod_pricing():
+    t_intra = cm.cost("pipelined_chain", 64 << 20, 16, inter_pod=False)
+    t_inter = cm.cost("pipelined_chain", 64 << 20, 16, inter_pod=True)
+    assert t_inter > 2 * t_intra  # interpod bw is 4x slower
+
+
+# ---------------------------- tuner ----------------------------------------
+
+
+def test_tuner_windows():
+    t = Tuner()
+    assert t.select(256, 16).algo in ("binomial", "knomial")
+    big = t.select(256 << 20, 16)
+    assert big.algo in ("pipelined_chain", "scatter_allgather", "bidir_chain")
+    assert big.num_chunks > 1 or big.algo == "scatter_allgather"
+    # non-power-of-two n: scatter_allgather must not be chosen
+    assert t.select(256 << 20, 12).algo != "scatter_allgather"
+
+
+def test_tuner_empirical_override(tmp_path):
+    t = Tuner()
+    M, n = 1 << 20, 8
+    analytic = t.select(M, n)
+    t.record(M, n, "chain", 1, measured_s=1e-9)  # fake: chain measured fastest
+    hit = t.select(M, n)
+    assert hit.source == "empirical" and hit.algo == "chain"
+    assert analytic.algo != "chain" or analytic.source == "analytic"
+    # persistence round-trip
+    p = str(tmp_path / "table.json")
+    t.save(p)
+    t2 = Tuner.load(p)
+    assert t2.select(M, n).algo == "chain"
+
+
+def test_tuner_calibrate_picks_best():
+    t = Tuner()
+    costs = {"binomial": 3.0, "chain": 1.0, "pipelined_chain": 2.0, "knomial": 4.0,
+             "scatter_allgather": 5.0, "direct": 6.0, "bidir_chain": 2.5}
+
+    def fake_measure(algo, M, n, k):
+        return costs[algo]
+
+    t.calibrate(fake_measure, sizes=[1 << 16], n=8)
+    assert t.select(1 << 16, 8).algo == "chain"

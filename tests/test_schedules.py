@@ -1,0 +1,132 @@
+"""Property tests for broadcast schedule generation (hypothesis).
+
+System invariants (independent of JAX):
+  * completeness — every rank ends up owning every chunk, for every
+    algorithm, rank count, root, and chunking;
+  * causality — the simulator rejects any schedule where a rank sends a
+    chunk before owning it (checked implicitly: simulate_bcast raises);
+  * per-round destination uniqueness (one ppermute per round is legal);
+  * round counts match the analytic cost models' step counts.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedules as S
+from repro.core.simulator import check_complete, simulate_bcast, simulate_reduce, timed_rounds
+
+ALGOS = ["direct", "chain", "binomial", "scatter_allgather", "pipelined_chain", "knomial", "bidir_chain"]
+
+
+def _build(algo, n, root, chunks, k=3):
+    if algo in ("pipelined_chain", "bidir_chain"):
+        return S.build(algo, n, root, num_chunks=chunks)
+    if algo == "knomial":
+        return S.build(algo, n, root, k=k)
+    return S.build(algo, n, root)
+
+
+@settings(max_examples=120, deadline=None)
+@given(
+    algo=st.sampled_from(ALGOS),
+    n=st.integers(1, 33),
+    root_seed=st.integers(0, 1000),
+    chunks=st.integers(1, 9),
+    k=st.integers(2, 5),
+)
+def test_completeness_and_causality(algo, n, root_seed, chunks, k):
+    if algo == "scatter_allgather" and (n & (n - 1)):
+        n = 1 << max(n.bit_length() - 1, 0)  # round down to a power of two
+    n = max(n, 1)
+    root = root_seed % n
+    sched = _build(algo, n, root, chunks, k)
+    sched.validate_ranks()
+    check_complete(sched)  # raises on incompleteness or causality violation
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(2, 32), root_seed=st.integers(0, 99), chunks=st.integers(2, 16))
+def test_pipelined_chain_round_count(n, root_seed, chunks):
+    """Eq. 5's round structure: M/C + n - 2 rounds."""
+    sched = S.pipelined_chain(n, root_seed % n, num_chunks=chunks)
+    assert sched.num_rounds == chunks + n - 2
+    # wire accounting: every edge carries every chunk exactly once
+    assert sched.wire_chunks() == (n - 1) * chunks
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(2, 64), root_seed=st.integers(0, 99))
+def test_binomial_round_count(n, root_seed):
+    sched = S.binomial(n, root_seed % n)
+    assert sched.num_rounds == math.ceil(math.log2(n))
+    # tree: exactly n-1 receives
+    assert sched.wire_chunks() == n - 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from([2, 4, 8, 16, 32]), root_seed=st.integers(0, 99))
+def test_scatter_allgather_bandwidth_optimal(n, root_seed):
+    """Eq. 4: 2*(n-1)/n * M bytes per rank on the wire (x n ranks total)."""
+    sched = S.scatter_allgather(n, root_seed % n)
+    assert sched.num_chunks == n
+    # recursive-halving scatter: n/2 chunks per level x log2(n) levels;
+    # ring allgather: n ranks x (n-1) rounds x 1 chunk
+    expected = (n // 2) * int(math.log2(n)) + (n - 1) * n
+    assert sched.wire_chunks() == expected
+
+
+def test_reduce_to_root():
+    rng = np.random.RandomState(0)
+    for n in (2, 3, 8, 12):
+        for root in (0, n - 1):
+            sched = S.binomial_reduce(n, root)
+            data = [rng.randn(1, 5) for _ in range(n)]
+            out = simulate_reduce(sched, data)
+            np.testing.assert_allclose(out[root], np.sum(data, axis=0), rtol=1e-9)
+
+
+def test_simulator_values_roundtrip():
+    """Data-level (not just ownership) correctness for every algorithm."""
+    rng = np.random.RandomState(1)
+    for algo in ALGOS:
+        for n in (2, 4, 8):
+            chunks = {"pipelined_chain": 6, "scatter_allgather": n}.get(algo, 1)
+            sched = _build(algo, n, 1 % n, chunks)
+            data = [rng.randn(sched.num_chunks, 3) for _ in range(n)]
+            out = simulate_bcast(sched, data)
+            for r in range(n):
+                np.testing.assert_array_equal(out[r], data[1 % n])
+
+
+def test_timed_rounds_matches_closed_form():
+    """The simulator clock agrees with Eq. 2 and Eq. 5 exactly."""
+    from repro.core.cost_model import TPU_V5E, t_chain, t_pipelined_chain
+
+    hw, B = TPU_V5E, TPU_V5E.link_bw
+    M, n, K = 1 << 20, 8, 16
+    chunk = M // K
+    sched = S.pipelined_chain(n, 0, num_chunks=K)
+    t_sim = timed_rounds(sched, chunk, hw.ts, B)
+    t_model = t_pipelined_chain(M, n, hw, B, C=chunk)
+    assert abs(t_sim - t_model) / t_model < 1e-9
+    sched = S.chain(n, 0)
+    assert abs(timed_rounds(sched, M, hw.ts, B) - t_chain(M, n, hw, B)) / t_chain(M, n, hw, B) < 1e-9
+
+
+def test_duplicate_destination_rejected():
+    with pytest.raises(ValueError):
+        S.Round((S.Transfer(0, 1), S.Transfer(2, 1)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(3, 48), root_seed=st.integers(0, 99), chunks=st.integers(1, 16))
+def test_bidir_chain_halves_rounds(n, root_seed, chunks):
+    """Beyond-paper: both directions carry all chunks; rounds = K + ceil((n-1)/2) - 1."""
+    sched = S.bidirectional_chain(n, root_seed % n, num_chunks=chunks)
+    hops = (n - 1 + 1) // 2
+    assert sched.num_rounds == chunks + hops - 1
+    assert sched.num_rounds <= S.pipelined_chain(n, 0, num_chunks=chunks).num_rounds

@@ -1,0 +1,133 @@
+"""Sharding-rule tests: divisibility fallbacks and spec validity."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.dist.sharding import batch_specs, cache_specs, param_specs
+from repro.models import Model
+
+
+class FakeMesh:
+    """Just enough mesh surface for the rule code (no devices needed)."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _leaf_specs(tree, specs):
+    return list(
+        zip(
+            jax.tree_util.tree_leaves_with_path(tree),
+            jax.tree_util.tree_leaves(specs, is_leaf=lambda s: isinstance(s, P)),
+        )
+    )
+
+
+@pytest.mark.parametrize("arch", ["minitron-8b", "hymba-1.5b", "mixtral-8x7b",
+                                  "qwen1.5-32b", "qwen3-moe-30b-a3b", "whisper-large-v3"])
+def test_param_specs_divide_evenly(arch):
+    """Every sharded dim is divisible by its mesh axis (no uneven shards)."""
+    cfg = get_config(arch)
+    shapes = Model(cfg).param_shapes()
+    specs = param_specs(shapes, MESH)
+    sizes = _axis_sizes(MESH)
+    for (path, leaf), spec in _leaf_specs(shapes, specs):
+        assert len(spec) == leaf.ndim, (path, spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([sizes[a] for a in axes]))
+            assert dim % n == 0, (jax.tree_util.keystr(path), leaf.shape, spec)
+
+
+def test_fallbacks():
+    """The specific non-divisible cases fall back as documented."""
+    sizes = _axis_sizes(MESH)
+
+    def find(tree, specs, substr):
+        for (path, leaf), spec in _leaf_specs(tree, specs):
+            if substr in jax.tree_util.keystr(path):
+                return leaf, spec
+        raise KeyError(substr)
+
+    # hymba: 25 heads not divisible -> train/prefill replicate attention on
+    # model (head_dim sharding would all-reduce score blocks, S Perf iter 1)
+    cfg = get_config("hymba-1.5b")
+    shapes = Model(cfg).param_shapes()
+    specs = param_specs(shapes, MESH)
+    leaf, spec = find(shapes, specs, "attn']['wq")
+    assert spec[-2] is None and spec[-1] is None, spec
+    # ... while decode uses head_dim sharding for serving memory
+    specs = param_specs(shapes, MESH, fsdp=False, attn_fallback="head_dim")
+    leaf, spec = find(shapes, specs, "attn']['wq")
+    assert spec[-1] == "model", spec
+    # paligemma MQA: 1 kv head -> replicated kv projections (train)
+    cfg = get_config("paligemma-3b")
+    shapes = Model(cfg).param_shapes()
+    specs = param_specs(shapes, MESH)
+    leaf, spec = find(shapes, specs, "attn']['wk")
+    assert spec[-2] is None and spec[-1] is None, spec
+
+    # mixtral: 8 experts < 16 -> expert ffn sharded instead
+    cfg = get_config("mixtral-8x7b")
+    shapes = Model(cfg).param_shapes()
+    specs = param_specs(shapes, MESH)
+    leaf, spec = find(shapes, specs, "moe']['w_up")
+    assert spec[-3] is None and spec[-1] == "model", spec
+
+    # qwen3: 128 experts -> experts sharded
+    cfg = get_config("qwen3-moe-30b-a3b")
+    shapes = Model(cfg).param_shapes()
+    specs = param_specs(shapes, MESH)
+    leaf, spec = find(shapes, specs, "moe']['w_up")
+    assert spec[-3] == "model", spec
+
+
+def test_inference_specs_have_no_fsdp():
+    cfg = get_config("minitron-8b")
+    shapes = Model(cfg).param_shapes()
+    specs = param_specs(shapes, MESH, fsdp=False)
+    for (path, leaf), spec in _leaf_specs(shapes, specs):
+        assert "data" not in [a for e in spec if e for a in (e if isinstance(e, tuple) else (e,))], (
+            jax.tree_util.keystr(path), spec)
+
+
+def test_batch_and_cache_specs():
+    cfg = get_config("minitron-8b")
+    m = Model(cfg)
+    shape = INPUT_SHAPES["train_4k"]
+    bspecs = batch_specs(m.input_specs(shape), MESH3)
+    assert jax.tree_util.tree_leaves(bspecs, is_leaf=lambda s: isinstance(s, P))[0][0] == ("pod", "data")
+
+    dec = INPUT_SHAPES["decode_32k"]
+    cspecs = cache_specs(m.input_specs(dec)["caches"], MESH, cfg)
+    flat = jax.tree_util.tree_leaves_with_path(cspecs, is_leaf=lambda s: isinstance(s, P))
+    kv = [s for p, s in flat if "'k'" in jax.tree_util.keystr(p)]
+    assert kv, "no kv cache leaves"
+    for s in kv:
+        # minitron kv=8 not divisible by 16 -> flash-decoding: seq on model
+        assert s[-3] in ("model", ("model",)), s
+
+    # long-context batch=1: sequence sharded over data
+    lng = INPUT_SHAPES["long_500k"]
+    cfg_g = get_config("gemma3-27b")
+    mg = Model(cfg_g)
+    cspecs = cache_specs(mg.input_specs(lng)["caches"], MESH, cfg_g)
+    flat = jax.tree_util.tree_leaves_with_path(cspecs, is_leaf=lambda s: isinstance(s, P))
+    kv = [s for p, s in flat if "'k'" in jax.tree_util.keystr(p)]
+    assert any(s[-3] is not None and "data" in (s[-3] if isinstance(s[-3], tuple) else (s[-3],)) for s in kv), kv
