@@ -1,0 +1,81 @@
+"""Gate the repo's jax API surface onto older jax releases.
+
+The code (and the test snippets) target the current public names —
+``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)`` and ``shard_map(check_vma=...)``.  Older 0.4.x installs
+ship the same functionality under ``jax.experimental.shard_map`` /
+``check_rep`` and without axis types, so this module installs thin
+forwarding shims when (and only when) a name is missing.  On a current jax
+everything here is a no-op.  Imported for its side effects from
+``repro/__init__.py`` so any ``import repro.*`` activates it.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "make_mesh"):
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            from jax.experimental import mesh_utils
+
+            if devices is None:
+                devices = mesh_utils.create_device_mesh(tuple(axis_shapes))
+            return jax.sharding.Mesh(devices, tuple(axis_names))
+
+        jax.make_mesh = make_mesh
+    elif "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            # axis_types only selects Auto/Explicit sharding-in-types mode;
+            # pre-AxisType releases are implicitly all-Auto, so drop it.
+            return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax.lax, "axis_size"):
+        from jax._src import core as _core
+
+        def axis_size(axis_name):
+            # 0.4.x keeps the static size in the axis env; axis_frame
+            # returns the bare int there (newer frames carry .size).
+            frame = _core.axis_frame(axis_name)
+            return getattr(frame, "size", frame)
+
+        jax.lax.axis_size = axis_size
+
+    if not hasattr(jax.lax, "pvary"):
+        # pvary is the varying-manual-axes annotation of the newer VMA
+        # system; pre-VMA releases treat everything as potentially varying,
+        # so the identity is semantically exact.
+        jax.lax.pvary = lambda x, axis_name=None: x
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                      check_rep=None, **kwargs):
+            if check_rep is None:
+                check_rep = True if check_vma is None else check_vma
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_rep,
+                              **kwargs)
+
+        jax.shard_map = shard_map
+
+
+_install()

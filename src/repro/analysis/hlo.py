@@ -33,6 +33,11 @@ DTYPE_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# One operand inside an op's argument list. Depending on XLA version the
+# text is either untyped ("dot(%x, %y)") or typed
+# ("dot(f32[8,64]{1,0} %x, ...)") — capture the optional inline type so
+# shapes never have to round-trip through the symbol table.
+_OPERAND_RE = re.compile(r"(?:(\w+\[[\d,]*\](?:\{[\d,\s]*\})?)\s+)?%([\w.\-]+)")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
 _CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition)=%([\w.\-]+)")
@@ -108,19 +113,31 @@ class HloModule:
             total += w * 2.0 * out * contracted
         return total
 
+    def _operands(self, ins: Instr) -> list:
+        """(dtype, shape) per operand: inline type when printed, else the
+        symbol table. Anchored at the op token so tuple-typed OUTPUTS
+        (async '-start' ops print '(f32[...], f32[...]) all-gather-start(...)')
+        are never mistaken for the argument list."""
+        m = re.search(r"[\w\-]+\(([^)]*)\)", ins.defn)
+        if not m:
+            return []
+        out = []
+        for typ, name in _OPERAND_RE.findall(m.group(1)):
+            if typ:
+                out.append(_first_shape(typ))
+            else:
+                out.append(self._symbols_dt.get(name, (None, ())))
+        return out
+
     def _contracted_size(self, ins: Instr) -> int:
         m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.defn)
         if not m:
             return 1
         dims = [int(d) for d in m.group(1).split(",") if d]
-        # operand shapes: resolve via the operand symbol table
-        ops = re.search(r"\(([^)]*)\)", ins.defn)
-        if not ops:
+        operands = self._operands(ins)
+        if not operands:
             return 1
-        first = ops.group(1).split(",")[0].strip().lstrip("%")
-        shape = self._symbols.get(first)
-        if shape is None:
-            return 1
+        _, shape = operands[0]
         n = 1
         for d in dims:
             if d < len(shape):
@@ -133,16 +150,13 @@ class HloModule:
             if ins.op not in ("dot", "convolution"):
                 continue
             total += w * _shape_bytes(ins.defn.split(" ", 1)[0])
-            ops = re.search(r"\(([^)]*)\)", ins.defn)
-            if ops:
-                for oname in ops.group(1).split(","):
-                    shape_dt = self._symbols_dt.get(oname.strip().lstrip("%"))
-                    if shape_dt:
-                        dt, shape = shape_dt
-                        n = 1
-                        for d in shape:
-                            n *= d
-                        total += w * n * DTYPE_BYTES.get(dt, 4)
+            for dt, shape in self._operands(ins):
+                if dt is None:
+                    continue
+                n = 1
+                for d in shape:
+                    n *= d
+                total += w * n * DTYPE_BYTES.get(dt, 4)
         return total
 
     def collective_wire_bytes(self) -> dict:
@@ -158,18 +172,26 @@ class HloModule:
                 continue
             fam = op.replace("-start", "")
             g = self._group_size(ins)
-            out_bytes = _shape_bytes(ins.defn.split("(", 1)[0])
+            # Output type is everything before the op token. Sync variadic
+            # (combined) collectives return a tuple of RESULTS — sum them.
+            # Async '-start' ops return (operand aliases..., results...) —
+            # count only the result half, not the aliased inputs.
+            m = re.search(r"[\w\-]+\(", ins.defn)
+            out_text = ins.defn[: m.start()] if m else ins.defn
+            shapes = [_shape_bytes(f"{dt}[{dims}]") for dt, dims in _SHAPE_RE.findall(out_text)]
+            if op.endswith("-start") and len(shapes) >= 2:
+                half = sorted(shapes)[len(shapes) // 2:]
+                out_bytes = sum(half) if len(shapes) % 2 == 0 else max(shapes)
+            else:
+                out_bytes = sum(shapes)
             in_bytes = 0
-            ops = re.search(r"\(([^)]*)\)", ins.defn)
-            if ops:
-                for oname in ops.group(1).split(","):
-                    sd = self._symbols_dt.get(oname.strip().lstrip("%"))
-                    if sd:
-                        dt, shape = sd
-                        n = 1
-                        for d in shape:
-                            n *= d
-                        in_bytes += n * DTYPE_BYTES.get(dt, 4)
+            for dt, shape in self._operands(ins):
+                if dt is None:
+                    continue
+                n = 1
+                for d in shape:
+                    n *= d
+                in_bytes += n * DTYPE_BYTES.get(dt, 4)
             if fam == "all-gather":
                 wire = out_bytes * (g - 1) / max(g, 1)
             elif fam == "all-reduce":

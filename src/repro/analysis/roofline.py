@@ -123,6 +123,8 @@ def analyze_compiled(
     cost = {}
     try:
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax wraps the dict
+            cost = cost[0] if cost else {}
     except Exception:
         pass
     mem_bytes = 0.0

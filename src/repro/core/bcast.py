@@ -144,19 +144,34 @@ def preduce_sum(x: jax.Array, axis_name, *, root: int = 0) -> jax.Array:
 
 def hierarchical_bcast(
     x: jax.Array,
-    axes: Sequence,
+    axes: Sequence | None = None,
     *,
+    mesh=None,
     root: int = 0,
     algo: str = "auto",
     tuner: Tuner | None = None,
-    inter_pod_axes: Sequence = ("pod",),
+    inter_pod_axes: Sequence | None = None,
 ) -> jax.Array:
     """Broadcast over multiple mesh axes, one level at a time.
 
     Mirrors MVAPICH2's hierarchical collectives: the inter-pod level runs
     first (pod leaders), then each pod fans out internally. Axes whose name
     is in ``inter_pod_axes`` are priced with the slower inter-pod constants.
+
+    Both the per-level axis order and the inter-pod classification come
+    from ``repro.dist.topology`` — the same mesh metadata that drives the
+    sharding rules — either explicitly (``axes=``) or derived from a mesh
+    (``mesh=``): ``bcast_axes(mesh)`` yields pod leaders first, then the
+    intra-pod data axes.
     """
+    from ..dist import topology
+
+    if axes is None:
+        if mesh is None:
+            raise ValueError("hierarchical_bcast needs `axes` or a `mesh` to derive them")
+        axes = topology.bcast_axes(mesh)
+    if inter_pod_axes is None:
+        inter_pod_axes = topology.INTER_POD_AXES
     for ax in axes:
         x = pbcast(
             x,

@@ -1,0 +1,83 @@
+"""Activation sharding hints.
+
+The model code marks activation cut-points with ``hint(x, kind)``; with no
+ambient context the call is the identity, so smoke tests and single-device
+runs never touch sharding machinery.  The dry-run (and any production
+launcher) wraps lowering in ``activation_hints(mesh, ...)``, which turns
+each marked point into a ``with_sharding_constraint`` against specs derived
+from the same mesh metadata as ``dist.sharding``.
+
+Kinds:
+  * ``"btd"``     — (B, T, D) residual-stream entry: batch over data axes.
+  * ``"btd_res"`` — per-block residual: same, plus sequence over ``model``
+    when ``seq_shard=True`` (sequence-parallel residuals).
+  * ``"btv"``     — (B, T, V) logits: batch over data axes, vocab over
+    ``model``.
+
+Per-dim divisibility fallback matches ``dist.sharding``: a dim that does
+not divide its axis product is left unconstrained.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import _Axes
+
+__all__ = ["hint", "activation_hints"]
+
+_STACK: list = []
+
+
+class _HintCtx:
+    """Axis assignment delegates to ``sharding._Axes`` so the divisibility
+    fallback (joint data axes -> innermost data axis -> replicate) is the
+    same policy the tensor layouts use."""
+
+    def __init__(self, mesh, dp: Optional[tuple], tp: Optional[str], seq_shard: bool):
+        self.mesh = mesh
+        self.ax = _Axes(mesh, dp=dp, tp=tp)
+        self.seq_shard = seq_shard
+
+    def spec_for(self, kind: str, shape) -> Optional[P]:
+        if len(shape) != 3:
+            return None
+        ax = self.ax
+        B, T, V = shape
+        b_ax = ax.dp_if_divisible(B)
+        if kind in ("btd", "btd_res"):
+            t_ax = None
+            if kind == "btd_res" and self.seq_shard:
+                t_ax = ax.tp_if_divisible(T)
+            return P(b_ax, t_ax, None)
+        if kind == "btv":
+            return P(b_ax, None, ax.tp_if_divisible(V))
+        raise ValueError(f"unknown hint kind {kind!r}")
+
+
+@contextlib.contextmanager
+def activation_hints(mesh, *, dp=None, tp=None, seq_shard=False):
+    """Activate activation-sharding hints for tracing under ``mesh``.
+
+    ``dp``/``tp`` default to the topology role constants (DP_AXES /
+    TP_AXIS) via ``_Axes``; pass explicit names only to override them."""
+    _STACK.append(_HintCtx(mesh, dp if dp is None else tuple(dp), tp, seq_shard))
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def hint(x, kind: str):
+    """Constrain ``x``'s sharding at a named cut-point (identity when no
+    ``activation_hints`` context is active)."""
+    if not _STACK:
+        return x
+    ctx = _STACK[-1]
+    spec = ctx.spec_for(kind, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

@@ -9,13 +9,19 @@ from __future__ import annotations
 
 import jax
 
+from ..dist.topology import DP_AXES, TP_AXIS, dp_axes
+
 __all__ = ["make_production_mesh", "make_local_mesh", "dp_axes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
-    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axis names follow ``repro.dist.topology``'s roles so the sharding rules,
+    activation hints, and hierarchical broadcast all key off the same mesh.
+    """
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axes = DP_AXES + (TP_AXIS,) if multi_pod else (DP_AXES[-1], TP_AXIS)
     return jax.make_mesh(
         shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
     )
@@ -27,11 +33,5 @@ def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
     assert n % model_parallel == 0, (n, model_parallel)
     shape = (n // model_parallel, model_parallel)
     return jax.make_mesh(
-        shape, ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+        shape, (DP_AXES[-1], TP_AXIS), axis_types=(jax.sharding.AxisType.Auto,) * 2
     )
-
-
-def dp_axes(mesh: jax.sharding.Mesh):
-    """The data-parallel axis (or axes) of a mesh: ('pod','data') when a pod
-    axis exists, else ('data',)."""
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -16,9 +16,17 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig
+from ..dist import topology
+from ..dist.sharding import cache_specs, param_specs
 from ..models import Model
 
-__all__ = ["Engine", "GenerationResult"]
+__all__ = ["Engine", "GenerationResult", "distribute_weights"]
+
+
+def _placements(mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
 
 
 @dataclasses.dataclass
@@ -29,17 +37,38 @@ class GenerationResult:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, *, mesh=None, max_len: int = 0):
+    """On a multi-device mesh the engine consumes ``repro.dist`` layouts:
+    weights land on ``param_specs(fsdp=False, attn_fallback='head_dim')``
+    (TP-only serving layout, head_dim split for non-divisible heads) and
+    prefill-built KV caches are placed per ``cache_specs``."""
+
+    def __init__(self, cfg: ModelConfig, params, *, mesh=None, max_len: int = 0,
+                 distribute: bool = False):
         self.cfg = cfg
         self.model = Model(cfg)
-        self.params = params
         self.mesh = mesh
         self.max_len = max_len
+        self._sharded = mesh is not None and mesh.devices.size > 1
+        if self._sharded:
+            pspecs = param_specs(
+                self.model.param_shapes(), mesh, fsdp=False, attn_fallback="head_dim"
+            )
+            if distribute:
+                params = distribute_weights(params, mesh, specs=pspecs)
+            else:
+                params = jax.device_put(params, _placements(mesh, pspecs))
+        self.params = params
         self._prefill = jax.jit(
             lambda p, b, ml: self.model.prefill(p, b, max_len=ml),
             static_argnums=(2,),
         )
         self._step = jax.jit(self.model.decode_step)
+
+    def _place_caches(self, caches):
+        if not self._sharded:
+            return caches
+        specs = cache_specs(caches, self.mesh, self.cfg)
+        return jax.device_put(caches, _placements(self.mesh, specs))
 
     def generate(
         self,
@@ -54,6 +83,7 @@ class Engine:
         T = batch["tokens"].shape[1]
         max_len = self.max_len or (T + steps)
         logits, caches = self._prefill(self.params, batch, max_len)
+        caches = self._place_caches(caches)
         offset = cfg.prefix_len if cfg.frontend == "vision" else 0
         cur = logits[:, -1]
         toks, lps = [], []
@@ -79,13 +109,24 @@ class Engine:
         )
 
 
-def distribute_weights(params, mesh, *, algo: str = "auto"):
-    """Broadcast freshly-loaded weights across the data axis with the tuned
-    library (the paper's 'training parameters exchange' applied at load)."""
+def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=None):
+    """Broadcast freshly-loaded weights across the data axes with the tuned
+    library (the paper's 'training parameters exchange' applied at load).
+
+    The broadcast runs hierarchically per ``dist.topology.bcast_axes(mesh)``
+    — inter-pod level first when a pod axis exists, priced with the tuner's
+    ``inter_pod`` constants. When ``specs`` (a ``param_specs`` tree) is
+    given, the replicated result is then laid out per those specs, so the
+    weights land exactly where the serving/training layout declares."""
     from ..core.bcast import pbcast_tree
 
+    axes = topology.bcast_axes(mesh)
+
     def run(p):
-        return pbcast_tree(p, "data", algo=algo)
+        for ax in axes:
+            p = pbcast_tree(p, ax, algo=algo, tuner=tuner,
+                            inter_pod=topology.is_inter_pod(ax))
+        return p
 
     f = jax.shard_map(
         run,
@@ -94,4 +135,7 @@ def distribute_weights(params, mesh, *, algo: str = "auto"):
         out_specs=jax.tree.map(lambda _: P(), params),
         check_vma=False,
     )
-    return jax.jit(f)(params)
+    out = jax.jit(f)(params)
+    if specs is not None:
+        out = jax.device_put(out, _placements(mesh, specs))
+    return out

@@ -1,0 +1,152 @@
+"""Offline fallback for ``hypothesis``: fixed-seed deterministic shims.
+
+The tier-1 suite must run from a clean checkout with no network access, so
+property tests import hypothesis via::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _compat import given, settings, strategies as st
+
+When real Hypothesis is installed the tests behave exactly as written.
+This module provides the same decorator surface but expands each strategy
+into a small deterministic example set: the boundary values of every
+strategy first, then fixed-seed pseudo-random draws.  Runs are identical
+across machines and invocations (no shrinking, no database, no deadlines).
+
+Only the strategy combinators this suite uses are implemented:
+``integers``, ``sampled_from``, ``lists``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import types
+
+import numpy as np
+
+# Deterministic fallback examples per test. Real hypothesis honors the
+# test's own max_examples; the fallback caps at _MAX_EXAMPLES (boundary
+# combinations always included) to keep the offline suite fast.
+_DEFAULT_EXAMPLES = 20
+_MAX_EXAMPLES = 24
+_SEED = 0xB0CA57  # "bcast"
+
+
+class _Strategy:
+    def boundary(self):
+        raise NotImplementedError
+
+    def draw(self, rng: np.random.RandomState):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        assert lo <= hi, (lo, hi)
+        self.lo, self.hi = int(lo), int(hi)
+
+    def boundary(self):
+        vals = [self.lo, self.hi, (self.lo + self.hi) // 2]
+        return list(dict.fromkeys(vals))
+
+    def draw(self, rng):
+        return int(rng.randint(self.lo, self.hi + 1))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        assert self.elements
+
+    def boundary(self):
+        return list(dict.fromkeys([self.elements[0], self.elements[-1]]))
+
+    def draw(self, rng):
+        return self.elements[int(rng.randint(len(self.elements)))]
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem: _Strategy, *, min_size: int = 0, max_size: int = 10):
+        self.elem = elem
+        self.min_size, self.max_size = int(min_size), int(max_size)
+
+    def boundary(self):
+        lo = self.elem.boundary()[0]
+        hi = self.elem.boundary()[-1] if len(self.elem.boundary()) > 1 else lo
+        shortest = [] if self.min_size == 0 else [lo] * self.min_size
+        return [shortest, [hi] * self.max_size]
+
+    def draw(self, rng):
+        n = int(rng.randint(self.min_size, self.max_size + 1))
+        return [self.elem.draw(rng) for _ in range(n)]
+
+
+def _examples(strats: dict):
+    """Deterministic example stream: boundary combos first (round-robin so
+    every strategy's edges appear even when the cartesian product is huge),
+    then fixed-seed random draws."""
+    names = list(strats)
+    bounds = [strats[k].boundary() for k in names]
+    # one example per boundary "rank": (lo, lo, ...), (hi, hi, ...), ...
+    for rank in range(max(len(b) for b in bounds)):
+        yield {k: b[min(rank, len(b) - 1)] for k, b in zip(names, bounds)}
+    # a few cross-combinations of extreme values for pairs of strategies
+    for i, j in itertools.islice(itertools.combinations(range(len(names)), 2), 4):
+        ex = {k: b[0] for k, b in zip(names, bounds)}
+        ex[names[i]] = bounds[i][-1]
+        ex[names[j]] = bounds[j][0]
+        yield ex
+    idx = 0
+    while True:
+        rng = np.random.RandomState((_SEED + idx) % (2**31 - 1))
+        yield {k: strats[k].draw(rng) for k in names}
+        idx += 1
+
+
+def given(**strats):
+    """Deterministic stand-in for ``hypothesis.given`` (kwargs style only)."""
+    for k, s in strats.items():
+        if not isinstance(s, _Strategy):
+            raise TypeError(f"unsupported strategy for {k!r}: {s!r}")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES), _MAX_EXAMPLES)
+            for ex in itertools.islice(_examples(strats), n):
+                fn(*args, **kwargs, **ex)
+
+        # Hide the strategy params from pytest's fixture resolution: expose
+        # a signature containing only the test's non-strategy (fixture)
+        # parameters, and drop __wrapped__ so pytest doesn't look through.
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items() if name not in strats]
+        del wrapper.__wrapped__
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        wrapper.hypothesis_compat_fallback = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int | None = None, deadline=None, **_ignored):
+    """Records ``max_examples`` on the wrapped test; other knobs are no-ops
+    (the fallback has no shrinking phase or deadline timer)."""
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._max_examples = int(max_examples)
+        return fn
+
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    integers=lambda min_value, max_value: _Integers(min_value, max_value),
+    sampled_from=_SampledFrom,
+    lists=lambda elem, *, min_size=0, max_size=10: _Lists(
+        elem, min_size=min_size, max_size=max_size
+    ),
+)

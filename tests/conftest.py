@@ -17,10 +17,15 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 sys.path.insert(0, SRC)
 
 
-def run_distributed(code: str, devices: int = 8, timeout: int = 560) -> str:
-    """Run ``code`` in a subprocess with N simulated host devices.
+def run_distributed(code: str, devices: int = 8, timeout: int = 560,
+                    env: dict | None = None) -> str:
+    """Run ``code`` in a subprocess with N simulated host devices (the CPU
+    device-count override: ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    is set before any jax import, so collectives and sharding see a real
+    multi-device platform without accelerators or network access).
 
     The snippet must print 'PASS' as its last line on success.
+    ``env``: extra environment overrides for the subprocess.
     """
     preamble = (
         "import os\n"
@@ -34,6 +39,7 @@ def run_distributed(code: str, devices: int = 8, timeout: int = 560) -> str:
         text=True,
         timeout=timeout,
         cwd=os.path.dirname(SRC),
+        env={**os.environ, **(env or {})},
     )
     if proc.returncode != 0 or "PASS" not in proc.stdout:
         raise AssertionError(

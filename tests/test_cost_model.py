@@ -4,7 +4,10 @@ from __future__ import annotations
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback — see tests/_compat.py
+    from _compat import given, settings, strategies as st
 
 from repro.core import cost_model as cm
 from repro.core.tuner import Tuner

@@ -1,0 +1,143 @@
+"""Property-style checks for the repro.dist layout rules, beyond the seed
+contract: every sharded dim divides evenly on 2-axis and 3-axis meshes for
+every assigned architecture, MoE expert-dim sharding, and the documented
+replication fallbacks."""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.dist import topology
+from repro.dist.sharding import batch_specs, cache_specs, param_specs
+from repro.models import Model
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+MESH2 = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+MESHES = {"2axis": MESH2, "3axis": MESH3}
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _leaf_specs(tree, specs):
+    return list(
+        zip(
+            jax.tree_util.tree_leaves_with_path(tree),
+            jax.tree_util.tree_leaves(specs, is_leaf=lambda s: isinstance(s, P)),
+        )
+    )
+
+
+def _check_divisible(tree, specs, mesh):
+    sizes = _axis_sizes(mesh)
+    for (path, leaf), spec in _leaf_specs(tree, specs):
+        assert len(spec) == leaf.ndim, (jax.tree_util.keystr(path), spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(math.prod(sizes[a] for a in axes))
+            assert n and dim % n == 0, (jax.tree_util.keystr(path), leaf.shape, spec)
+
+
+@pytest.mark.parametrize("mesh_name", sorted(MESHES))
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("fsdp,fallback", [(True, "replicate"), (False, "head_dim")])
+def test_param_specs_divide_all_archs(arch, mesh_name, fsdp, fallback):
+    """Full-rank specs with even shards for every arch x mesh x mode."""
+    mesh = MESHES[mesh_name]
+    shapes = Model(get_config(arch)).param_shapes()
+    specs = param_specs(shapes, mesh, fsdp=fsdp, attn_fallback=fallback)
+    _check_divisible(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("mesh_name", sorted(MESHES))
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "qwen3-moe-30b-a3b", "moonshot-v1-16b-a3b"])
+def test_moe_expert_dim_rule(arch, mesh_name):
+    """Experts shard on `model` when divisible, else the expert FFN width."""
+    mesh = MESHES[mesh_name]
+    cfg = get_config(arch)
+    shapes = Model(cfg).param_shapes()
+    specs = param_specs(shapes, mesh)
+    tp = _axis_sizes(mesh)["model"]
+    seen = 0
+    for (path, leaf), spec in _leaf_specs(shapes, specs):
+        key = jax.tree_util.keystr(path)
+        if "moe']['w_" not in key or "shared" in key:
+            continue
+        seen += 1
+        if cfg.num_experts % tp == 0:
+            assert spec[-3] == "model", (key, spec)
+        else:
+            assert spec[-3] is None, (key, spec)
+            ff = spec[-1] if "w_down" not in key else spec[-2]
+            assert ff == "model", (key, spec)
+    assert seen, "no expert leaves found"
+
+
+@pytest.mark.parametrize("mesh_name", sorted(MESHES))
+def test_no_data_axis_without_fsdp(mesh_name):
+    mesh = MESHES[mesh_name]
+    for arch in ("minitron-8b", "qwen3-moe-30b-a3b", "hymba-1.5b"):
+        shapes = Model(get_config(arch)).param_shapes()
+        for _, spec in _leaf_specs(shapes, param_specs(shapes, mesh, fsdp=False)):
+            for e in spec:
+                axes = e if isinstance(e, tuple) else (e,)
+                assert "data" not in axes and "pod" not in axes, (arch, spec)
+
+
+@pytest.mark.parametrize("mesh_name", sorted(MESHES))
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k", "decode_32k"])
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_batch_and_cache_specs_divide(arch, shape_name, mesh_name):
+    mesh = MESHES[mesh_name]
+    cfg = get_config(arch)
+    m = Model(cfg)
+    tree = m.input_specs(INPUT_SHAPES[shape_name])
+    caches = tree.pop("caches", None)
+    _check_divisible(tree, batch_specs(tree, mesh), mesh)
+    if caches is not None:
+        _check_divisible(caches, cache_specs(caches, mesh, cfg), mesh)
+
+
+def test_cache_rule_kv_vs_seq():
+    """kv-heads on `model` when divisible; otherwise the sequence dim takes
+    it (flash-decoding); batch=1 long context spills sequence onto 'data'."""
+    cfg = get_config("gemma3-27b")  # kv=16 divides
+    m = Model(cfg)
+    caches = m.input_specs(INPUT_SHAPES["long_500k"])["caches"]
+    flat = jax.tree_util.tree_leaves_with_path(
+        cache_specs(caches, MESH2, cfg), is_leaf=lambda s: isinstance(s, P)
+    )
+    kv = [s for p, s in flat if "'k'" in jax.tree_util.keystr(p)]
+    assert kv
+    for s in kv:
+        assert s[-2] == "model", s            # kv-heads sharded
+        seq = s[-3] if isinstance(s[-3], tuple) else (s[-3],)
+        assert "data" in seq, s               # batch=1 -> seq over data
+
+
+def test_topology_roles():
+    assert topology.dp_axes(MESH3) == ("pod", "data")
+    assert topology.dp_axes(MESH2) == ("data",)
+    assert topology.dp_size(MESH3) == 32
+    assert topology.tp_axis(MESH2) == "model" and topology.tp_size(MESH3) == 16
+    assert topology.inter_pod_axes(MESH3) == ("pod",)
+    assert topology.inter_pod_axes(MESH2) == ()
+    # hierarchical broadcast order: pod leaders first, then intra-pod data
+    assert topology.bcast_axes(MESH3) == ("pod", "data")
+    assert topology.bcast_axes(MESH2) == ("data",)
+    assert topology.is_inter_pod("pod") and not topology.is_inter_pod("data")

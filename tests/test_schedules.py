@@ -14,7 +14,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback — see tests/_compat.py
+    from _compat import given, settings, strategies as st
 
 from repro.core import schedules as S
 from repro.core.simulator import check_complete, simulate_bcast, simulate_reduce, timed_rounds
