@@ -15,12 +15,30 @@ SIZES = [1 << 10, 16 << 10, 256 << 10, 4 << 20, 32 << 20]
 RANKS = [2, 4, 8, 16]
 
 
-def rows(quick: bool = False):
+def _dryrun_point(M: int, n: int, tuner: Tuner) -> dict:
+    """Simulator-clock stand-ins for the worker measurements (CI smoke)."""
+    from repro.comm import plan_collective
+
+    dec = tuner.select(M, n)
+    plan = plan_collective("bcast", M, n)
+    return {
+        "tuned": plan.timed_rounds_s(),
+        "tuned_algo": dec.algo,
+        "xla_psum": cm.cost("nccl_ring", M, n),
+        "xla_allgather": cm.cost("nccl_ring", M, n),
+    }
+
+
+def rows(quick: bool = False, dryrun: bool = False):
     tuner = Tuner()
     ranks = [4, 8] if quick else RANKS
     sizes = SIZES[:3] if quick else SIZES
     out = []
     for n in ranks:
+        if dryrun:
+            res = {str(M): _dryrun_point(M, n, tuner) for M in sizes}
+            out.extend(_emit(res, n, tuner))
+            continue
         worker = MEASURE_SNIPPET + f"""
 res = {{}}
 for M in {sizes}:
@@ -35,28 +53,34 @@ for M in {sizes}:
 print(json.dumps(res))
 """
         res = run_worker(worker, devices=n)
-        for M_str, r in res.items():
-            M = int(M_str)
-            dec = tuner.select(M, n)
-            model_tuned = cm.cost(dec.algo, M, n) if dec.algo in cm.ALGO_COSTS else 0
-            # NCCL stand-in: fixed-slice pipelined ring (no tuning)
-            model_nccl = cm.cost("nccl_ring", M, n)
-            out.append(
-                {
-                    "name": f"fig1_intranode/n{n}/M{M}/{r['tuned_algo']}",
-                    "us_per_call": r["tuned"] * 1e6,
-                    "derived": {
-                        # measured CPU numbers are dominated by the host
-                        # backend's fixed per-collective overhead (ts ~ 0.3 s);
-                        # they validate round-count scaling, not bandwidth.
-                        "xla_psum_us": r["xla_psum"] * 1e6,
-                        "xla_allgather_us": r["xla_allgather"] * 1e6,
-                        "tpu_model_tuned_us": model_tuned * 1e6,
-                        "tpu_model_nccl_ring_us": model_nccl * 1e6,
-                        "tpu_model_speedup_vs_nccl": model_nccl / max(model_tuned, 1e-12),
-                    },
-                }
-            )
+        out.extend(_emit(res, n, tuner))
+    return out
+
+
+def _emit(res: dict, n: int, tuner: Tuner) -> list:
+    out = []
+    for M_str, r in res.items():
+        M = int(M_str)
+        dec = tuner.select(M, n)
+        model_tuned = cm.cost(dec.algo, M, n) if dec.algo in cm.ALGO_COSTS else 0
+        # NCCL stand-in: fixed-slice pipelined ring (no tuning)
+        model_nccl = cm.cost("nccl_ring", M, n)
+        out.append(
+            {
+                "name": f"fig1_intranode/n{n}/M{M}/{r['tuned_algo']}",
+                "us_per_call": r["tuned"] * 1e6,
+                "derived": {
+                    # measured CPU numbers are dominated by the host
+                    # backend's fixed per-collective overhead (ts ~ 0.3 s);
+                    # they validate round-count scaling, not bandwidth.
+                    "xla_psum_us": r["xla_psum"] * 1e6,
+                    "xla_allgather_us": r["xla_allgather"] * 1e6,
+                    "tpu_model_tuned_us": model_tuned * 1e6,
+                    "tpu_model_nccl_ring_us": model_nccl * 1e6,
+                    "tpu_model_speedup_vs_nccl": model_nccl / max(model_tuned, 1e-12),
+                },
+            }
+        )
     return out
 
 

@@ -1,15 +1,19 @@
 """Tuning-framework artifact — the crossover table (paper Sec. IV-B):
 which algorithm + chunk count the tuner selects per (message size, ranks),
-for intra- and inter-pod paths. Written to experiments/tuner_table.json."""
+for intra- and inter-pod paths, for BOTH the broadcast op and the gradient
+sync (allreduce) op. Written to experiments/tuner_table.json in the schema
+``repro.comm.tables.load_tuner_table`` validates."""
 from __future__ import annotations
 
 import json
 import os
 
+from repro.comm.tables import load_tuner_table
 from repro.core.tuner import Tuner
 
 
-def rows(quick: bool = False):
+def rows(quick: bool = False, dryrun: bool = False):
+    del dryrun  # this suite is analytic already — same table either way
     tuner = Tuner()
     out = []
     table = {}
@@ -19,30 +23,38 @@ def rows(quick: bool = False):
         for n in ranks:
             for M in sizes:
                 d = tuner.select(M, n, inter_pod=inter_pod)
+                sync = tuner.select(M, n, op="allreduce", inter_pod=inter_pod)
                 key = f"{'inter' if inter_pod else 'intra'}/n{n}/M{M}"
                 table[key] = {
                     "algo": d.algo,
                     "num_chunks": d.num_chunks,
                     "predicted_us": d.predicted_s * 1e6,
+                    "sync": sync.algo,
+                    "sync_num_chunks": sync.num_chunks,
+                    "sync_predicted_us": sync.predicted_s * 1e6,
                 }
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/tuner_table.json", "w") as f:
         json.dump(table, f, indent=1, sort_keys=True)
+    load_tuner_table("experiments/tuner_table.json")  # schema gate at source
 
     # summarize crossover points per rank count (intra-pod)
     for n in ranks:
-        crossings = []
-        prev = None
+        crossings, sync_crossings = [], []
+        prev = sync_prev = None
         for M in sizes:
-            algo = table[f"intra/n{n}/M{M}"]["algo"]
-            if algo != prev:
-                crossings.append(f"{algo}@{M}")
-                prev = algo
+            entry = table[f"intra/n{n}/M{M}"]
+            if entry["algo"] != prev:
+                crossings.append(f"{entry['algo']}@{M}")
+                prev = entry["algo"]
+            if entry["sync"] != sync_prev:
+                sync_crossings.append(f"{entry['sync']}@{M}")
+                sync_prev = entry["sync"]
         out.append(
             {
                 "name": f"tuner_crossover/n{n}",
                 "us_per_call": table[f"intra/n{n}/M{1 << 20}"]["predicted_us"],
-                "derived": {"windows": crossings},
+                "derived": {"windows": crossings, "sync_windows": sync_crossings},
             }
         )
     return out

@@ -51,7 +51,7 @@ def trace_cost(n: int, tuner: Tuner) -> dict:
     return {"tuned_s": tuned, "oneshot_s": oneshot, "algos": algos}
 
 
-def rows(quick: bool = False):
+def rows(quick: bool = False, dryrun: bool = False):
     tuner = Tuner()
     out = []
     for n in ([32] if quick else [8, 32, 64, 128]):
@@ -77,6 +77,9 @@ def rows(quick: bool = False):
             }
         )
 
+    if dryrun:  # CI smoke: skip the end-to-end training worker
+        return out
+
     # measured end-to-end small-model training
     worker = """
 import time, json
@@ -86,7 +89,7 @@ from repro.train.trainer import Trainer
 from repro.launch.mesh import make_local_mesh
 
 res = {}
-for mode in ("param_bcast", "grad_allreduce"):
+for mode in ("param_bcast", "tuned_allreduce", "grad_allreduce"):
     run = RunConfig(total_steps=6, warmup_steps=1, sync_mode=mode, learning_rate=1e-3)
     tr = Trainer(get_config("xlstm-350m-smoke"), run, mesh=make_local_mesh(1))
     t0 = time.time()
@@ -101,7 +104,9 @@ print(json.dumps(res))
             "us_per_call": m["param_bcast"]["total_s"] * 1e6 / 6,
             "derived": {
                 "allreduce_us_per_step": m["grad_allreduce"]["total_s"] * 1e6 / 6,
+                "tuned_allreduce_us_per_step": m["tuned_allreduce"]["total_s"] * 1e6 / 6,
                 "bcast_final_loss": m["param_bcast"]["final_loss"],
+                "tuned_allreduce_final_loss": m["tuned_allreduce"]["final_loss"],
                 "allreduce_final_loss": m["grad_allreduce"]["final_loss"],
             },
         }

@@ -4,9 +4,14 @@
   fig2: inter-pod hierarchical bcast, 64/128 ranks      (paper Fig. 2)
   fig3: VGG/CNTK application-level data-parallel sync   (paper Fig. 3)
   tuner: the tuning-framework crossover table           (paper Sec. IV-B)
+  allreduce: gradient-sync strategies + per-op empirical table (repro.comm)
 
-Prints ``name,us_per_call,derived`` CSV; also writes experiments/bench.json.
-Pass --full for the complete sweep (slower), default is the quick profile.
+Prints ``name,us_per_call,derived`` CSV; also writes experiments/bench.json
+(and the tuner/allreduce suites their experiments/*_table.json artifacts —
+all schema-validated by ``repro.comm.tables`` at write time).
+Pass --full for the complete sweep (slower); --dryrun replaces device-worker
+measurements with simulator/cost-model values at tiny sizes so CI can smoke
+the whole empirical-table pipeline on CPU in seconds.
 """
 from __future__ import annotations
 
@@ -20,14 +25,23 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="no device workers: simulator/cost-model numbers only")
     ap.add_argument("--only", default=None, help="substring filter")
     args = ap.parse_args()
     quick = not args.full
 
-    from . import bench_internode, bench_intranode, bench_tuner_table, bench_vgg_cntk
+    from . import (
+        bench_allreduce,
+        bench_internode,
+        bench_intranode,
+        bench_tuner_table,
+        bench_vgg_cntk,
+    )
 
     suites = {
         "tuner": bench_tuner_table.rows,
+        "allreduce": bench_allreduce.rows,
         "fig1": bench_intranode.rows,
         "fig2": bench_internode.rows,
         "fig3": bench_vgg_cntk.rows,
@@ -39,7 +53,11 @@ def main() -> None:
         if args.only and args.only not in key:
             continue
         try:
-            for r in fn(quick=quick):
+            for r in fn(quick=quick, dryrun=args.dryrun):
+                if args.dryrun:
+                    # measured columns are simulator/cost-model stand-ins;
+                    # never let them read as device measurements downstream
+                    r.setdefault("derived", {})["dryrun"] = True
                 all_rows.append(r)
                 print(f"{r['name']},{r['us_per_call']:.2f},{json.dumps(r['derived'])}")
                 sys.stdout.flush()
@@ -49,6 +67,9 @@ def main() -> None:
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/bench.json", "w") as f:
         json.dump(all_rows, f, indent=1)
+    from repro.comm.tables import load_bench
+
+    load_bench("experiments/bench.json")  # schema gate at write time
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

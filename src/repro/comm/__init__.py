@@ -1,0 +1,61 @@
+"""repro.comm — the unified collective-plan subsystem.
+
+Promotes the paper's tuned-broadcast stack into a collective-communication
+library: one op family (bcast / reduce / allreduce / allgather /
+reduce_scatter) sharing the schedule IR (``core.schedules``), the numpy
+simulator, the analytic cost models, and the per-op tuner
+(``Tuner.select(M, n, op=..., inter_pod=...)``).
+
+Layering (DESIGN.md Sec. 3):
+
+    core.schedules (IR)  ->  comm.schedules (per-op builders)
+                         ->  comm.plan      (CollectivePlan: decide + build)
+                         ->  comm.executors (shard_map replay, fused loops)
+                         ->  comm.api       (pbcast/pallreduce/... + *_tree)
+                         ->  comm.tables    (validated experiments/ artifacts)
+
+Consumers: ``train.train_step`` (sync_mode='tuned_allreduce'),
+``serve.engine.distribute_weights``, ``launch.hillclimb_bcast``,
+``benchmarks/``. ``core.bcast`` remains as a thin compatibility facade.
+"""
+from ..core.tuner import OPS, Decision, Tuner, default_tuner
+from .api import (
+    apply_plan,
+    hierarchical_allreduce_axes,
+    pallgather,
+    pallreduce,
+    pallreduce_tree,
+    pbcast,
+    pbcast_tree,
+    preduce,
+    preduce_scatter,
+)
+from .executors import execute_collective, fused_rsb_fused
+from .plan import CollectivePlan, decide, expected_wire_bytes, plan_collective
+from .tables import TableSchemaError, load_bench, load_tuner_table, tuner_from_table
+
+__all__ = [
+    "OPS",
+    "Decision",
+    "Tuner",
+    "default_tuner",
+    "CollectivePlan",
+    "plan_collective",
+    "decide",
+    "expected_wire_bytes",
+    "execute_collective",
+    "fused_rsb_fused",
+    "apply_plan",
+    "pbcast",
+    "pbcast_tree",
+    "preduce",
+    "preduce_scatter",
+    "pallreduce",
+    "pallgather",
+    "pallreduce_tree",
+    "hierarchical_allreduce_axes",
+    "TableSchemaError",
+    "load_tuner_table",
+    "load_bench",
+    "tuner_from_table",
+]

@@ -1,0 +1,358 @@
+"""Collective entry points (callable inside ``jax.shard_map``).
+
+Every function resolves a :class:`CollectivePlan` at trace time (tuned
+decision + schedule) and executes it with the generalized executor — the
+per-op analogue of how ``MPI_Bcast``/``MPI_Allreduce`` route through
+MVAPICH2-GDR's tuned tables. ``*_tree`` variants communicate whole pytrees
+through same-dtype buckets (``core.bucketing``), optionally staging each
+packed bucket through the :func:`repro.kernels.chunked_copy` Pallas pipeline
+(the paper's pipelined-copy primitive, Sec. IV-C).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import algorithms, bucketing
+from ..core.tuner import Tuner
+from .executors import execute_collective, fused_rsb_fused
+from .plan import ONE_SHOT, CollectivePlan, plan_collective
+
+__all__ = [
+    "apply_plan",
+    "pbcast",
+    "pbcast_tree",
+    "preduce",
+    "pallreduce",
+    "pallgather",
+    "preduce_scatter",
+    "pallreduce_tree",
+    "hierarchical_allreduce_axes",
+]
+
+# generic-executor round budget before switching to a fused fori_loop
+# executor (HLO size; see core.algorithms.schedule_bcast's identical policy)
+_MAX_UNROLLED_ROUNDS = 256
+
+
+def _flat(x: jax.Array):
+    flat = jnp.ravel(x)
+    return flat, flat.size * flat.dtype.itemsize
+
+
+def _chunked(flat: jax.Array, k: int):
+    """Pad + reshape a flat buffer to (k, ceil(size/k)). ``k`` is honored
+    even when it exceeds the element count (tiny buffers pad up), because
+    the schedule's chunk count is load-bearing for the executor."""
+    k = max(1, k)
+    chunk_elems = max(1, -(-flat.size // k))
+    pad = k * chunk_elems - flat.size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(k, chunk_elems), pad
+
+
+def _unchunked(buf: jax.Array, pad: int, shape, dtype):
+    out = buf.reshape(-1)
+    if pad:
+        out = out[: out.size - pad]
+    return out.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# plan execution (consumers that pre-build CollectivePlans host-side —
+# serving weight distribution, hillclimb — replay them here verbatim)
+# ---------------------------------------------------------------------------
+
+
+def apply_plan(plan: CollectivePlan, x: jax.Array, axis_name, *, fused: bool = True) -> jax.Array:
+    """Execute a pre-built :class:`CollectivePlan` on ``x`` inside
+    ``shard_map`` — exactly the schedule the plan carries, no re-deciding.
+
+    bcast/reduce/allreduce take and return the full buffer; allgather takes
+    the per-rank shard and returns the ``(n, *shard)`` stack; reduce_scatter
+    takes the full buffer and returns the rank's flat shard.
+    """
+    if plan.algo == "noop":
+        return x if plan.op != "allgather" else x[None]
+    if plan.algo == "xla_psum":
+        if plan.op == "bcast":
+            return algorithms.xla_psum_bcast(x, axis_name, root=plan.root)
+        return lax.psum(x, axis_name)
+    if plan.algo == "xla_allgather":
+        if plan.op == "bcast":
+            return algorithms.xla_allgather_bcast(x, axis_name, root=plan.root)
+        return lax.all_gather(x, axis_name, axis=0)
+    sched = plan.schedule
+    if plan.op == "allgather":
+        flat = jnp.ravel(x)
+        buf = jnp.zeros((plan.n, flat.size), flat.dtype)
+        buf = lax.dynamic_update_slice(buf, flat[None], (lax.axis_index(axis_name), 0))
+        out = execute_collective(sched, buf, axis_name)
+        return out.reshape((plan.n,) + x.shape)
+    if plan.op == "reduce_scatter":
+        buf, _pad = _chunked(jnp.ravel(x), plan.n)
+        out = execute_collective(sched, buf, axis_name)
+        return lax.dynamic_slice(out, (lax.axis_index(axis_name), 0), (1, buf.shape[1]))[0]
+    flat, _M = _flat(x)
+    # fused fori_loop executors keep HLO size independent of the chunk count
+    if (
+        plan.op == "bcast"
+        and plan.algo == "pipelined_chain"
+        and fused
+        and sched.num_rounds > _MAX_UNROLLED_ROUNDS
+    ):
+        buf, pad = _chunked(flat, plan.num_chunks)
+        out = algorithms.pipelined_chain_fused(buf, axis_name, root=plan.root)
+        return _unchunked(out, pad, x.shape, x.dtype)
+    if plan.op == "allreduce" and plan.algo == "ring_allreduce" and fused:
+        return algorithms.ring_allreduce(x, axis_name)
+    if (
+        plan.op == "allreduce"
+        and plan.algo == "fused_rsb"
+        and fused
+        and sched.num_rounds > _MAX_UNROLLED_ROUNDS
+    ):
+        buf, pad = _chunked(flat, plan.num_chunks)
+        out = fused_rsb_fused(buf, axis_name, root=plan.root)
+        return _unchunked(out, pad, x.shape, x.dtype)
+    buf, pad = _chunked(flat, sched.num_chunks)
+    out = execute_collective(sched, buf, axis_name)
+    return _unchunked(out, pad, x.shape, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# bcast / reduce (the paper's ops, now plan-driven)
+# ---------------------------------------------------------------------------
+
+
+def pbcast(
+    x: jax.Array,
+    axis_name,
+    *,
+    root: int = 0,
+    algo: str = "auto",
+    num_chunks: int | None = None,
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+    fused: bool = True,
+) -> jax.Array:
+    """Broadcast ``x`` from ``root`` over the named mesh axis (must be called
+    inside ``shard_map``; every rank passes a same-shape buffer and receives
+    the root's)."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    if algo == "xla_psum":
+        return algorithms.xla_psum_bcast(x, axis_name, root=root)
+    if algo == "xla_allgather":
+        return algorithms.xla_allgather_bcast(x, axis_name, root=root)
+    _flat_x, M = _flat(x)
+    plan = plan_collective(
+        "bcast", M, n, root=root, algo=algo, num_chunks=num_chunks,
+        tuner=tuner, inter_pod=inter_pod,
+    )
+    return apply_plan(plan, x, axis_name, fused=fused)
+
+
+def preduce(
+    x: jax.Array,
+    axis_name,
+    *,
+    root: int = 0,
+    algo: str = "auto",
+    num_chunks: int | None = None,
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+) -> jax.Array:
+    """Reduce-to-root (sum). Non-root ranks return garbage partial sums by
+    design (MPI_Reduce semantics) — only the root's output is meaningful."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    _flat_x, M = _flat(x)
+    plan = plan_collective(
+        "reduce", M, n, root=root, algo=algo, num_chunks=num_chunks,
+        tuner=tuner, inter_pod=inter_pod,
+    )
+    return apply_plan(plan, x, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# allreduce / allgather / reduce_scatter (beyond-paper ops, Sec. VII)
+# ---------------------------------------------------------------------------
+
+
+def pallreduce(
+    x: jax.Array,
+    axis_name,
+    *,
+    algo: str = "auto",
+    num_chunks: int | None = None,
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+    fused: bool = True,
+) -> jax.Array:
+    """All-reduce (sum) over the named axis through the tuned plan layer.
+
+    ``algo``: 'auto', 'reduce_then_bcast', 'fused_rsb', 'ring_allreduce', or
+    the one-shot baseline 'xla_psum'.
+    """
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    if algo == "xla_psum":
+        return lax.psum(x, axis_name)
+    _flat_x, M = _flat(x)
+    plan = plan_collective(
+        "allreduce", M, n, algo=algo, num_chunks=num_chunks,
+        tuner=tuner, inter_pod=inter_pod,
+    )
+    return apply_plan(plan, x, axis_name, fused=fused)
+
+
+def pallgather(
+    x: jax.Array,
+    axis_name,
+    *,
+    algo: str = "auto",
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+) -> jax.Array:
+    """All-gather the per-rank shard ``x`` into a stacked ``(n, *x.shape)``
+    array (the ``lax.all_gather(axis=0)`` convention).
+
+    ``algo``: 'auto', 'ring_allgather', 'doubling_allgather' (power-of-two
+    n), or the one-shot baseline 'xla_allgather'.
+    """
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x[None]
+    if algo == "xla_allgather":
+        return lax.all_gather(x, axis_name, axis=0)
+    M = n * x.size * x.dtype.itemsize  # full gathered payload
+    plan = plan_collective(
+        "allgather", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
+    )
+    return apply_plan(plan, x, axis_name)
+
+
+def preduce_scatter(
+    x: jax.Array,
+    axis_name,
+    *,
+    algo: str = "auto",
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+) -> jax.Array:
+    """Reduce-scatter (sum): every rank contributes the full flat buffer and
+    receives its rank-indexed shard of the sum — a flat array of
+    ``ceil(x.size / n)`` elements (zero-padded tail on the last shard)."""
+    n = lax.axis_size(axis_name)
+    flat = jnp.ravel(x)
+    if n == 1:
+        return flat
+    M = flat.size * flat.dtype.itemsize
+    plan = plan_collective(
+        "reduce_scatter", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
+    )
+    if plan.algo == "noop":
+        return flat
+    return apply_plan(plan, x, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# pytree variants (bucketed; the application regime of paper Sec. V-D)
+# ---------------------------------------------------------------------------
+
+
+def _tree_collective(op_fn, tree, axis_name, *, bucket_bytes, stage, stage_chunk, **kw):
+    spec = bucketing.plan_buckets(tree, bucket_bytes)
+    buckets = bucketing.pack_buckets(tree, spec)
+    out = []
+    for b in buckets:
+        if not b.size:
+            out.append(b)
+            continue
+        if stage:
+            from ..kernels.chunked_copy import chunked_copy
+
+            b = chunked_copy(b, chunk_elems=stage_chunk)
+        out.append(op_fn(b, axis_name, **kw))
+    return bucketing.unpack_buckets(out, spec)
+
+
+def pbcast_tree(
+    tree: Any,
+    axis_name,
+    *,
+    root: int = 0,
+    algo: str = "auto",
+    tuner: Tuner | None = None,
+    bucket_bytes: int = 4 << 20,
+    inter_pod: bool = False,
+    stage: bool = False,
+    stage_chunk: int = 64 * 1024,
+) -> Any:
+    """Broadcast a pytree via same-dtype buckets, each tuned independently.
+
+    The bucket mix reproduces the application regime of the paper (Sec.
+    V-D): a few large buckets (pipelined-chain territory) plus a tail of
+    small ones (k-nomial territory). ``stage=True`` routes each packed
+    bucket through the ``chunked_copy`` Pallas staging pipeline first.
+    """
+    return _tree_collective(
+        pbcast, tree, axis_name, bucket_bytes=bucket_bytes, stage=stage,
+        stage_chunk=stage_chunk, root=root, algo=algo, tuner=tuner,
+        inter_pod=inter_pod,
+    )
+
+
+def pallreduce_tree(
+    tree: Any,
+    axes: Sequence,
+    *,
+    algo: str = "auto",
+    tuner: Tuner | None = None,
+    bucket_bytes: int = 4 << 20,
+    inter_pod_axes: Sequence = (),
+    stage: bool = False,
+    stage_chunk: int = 64 * 1024,
+) -> Any:
+    """Hierarchical bucketed all-reduce over one or more mesh axes.
+
+    Axes run in the given order (use :func:`hierarchical_allreduce_axes` for
+    the intra-pod-first convention); axes named in ``inter_pod_axes`` are
+    priced with the tuner's inter-pod constants, so the pod level can pick a
+    different algorithm than the fast intra-pod level. The tree is packed
+    into buckets ONCE; all hierarchy levels run over the packed buffers.
+    """
+    spec = bucketing.plan_buckets(tree, bucket_bytes)
+    buckets = bucketing.pack_buckets(tree, spec)
+    inter = tuple(inter_pod_axes)
+    out = []
+    for b in buckets:
+        if not b.size:
+            out.append(b)
+            continue
+        if stage:
+            from ..kernels.chunked_copy import chunked_copy
+
+            b = chunked_copy(b, chunk_elems=stage_chunk)
+        for ax in axes:
+            b = pallreduce(b, ax, algo=algo, tuner=tuner, inter_pod=(ax in inter))
+        out.append(b)
+    return bucketing.unpack_buckets(out, spec)
+
+
+def hierarchical_allreduce_axes(mesh) -> tuple:
+    """Axis order for hierarchical allreduce: intra-pod data axes first,
+    then the inter-pod level (the reverse of ``topology.bcast_axes`` —
+    reduce locally before touching the slow fabric)."""
+    from ..dist import topology
+
+    return tuple(reversed(topology.bcast_axes(mesh)))

@@ -1,0 +1,132 @@
+"""shard_map executors for the generalized (combine-aware) schedule IR.
+
+:func:`execute_collective` replays ANY :class:`core.schedules.Schedule` —
+bcast, reduce, allreduce, allgather, reduce_scatter — with one
+``lax.ppermute`` per lane per round; combining transfers accumulate at the
+destination. :func:`fused_rsb_fused` is the production-path fori_loop
+executor for the fused allreduce chain (two ppermutes per iteration, HLO
+size independent of chunk count), mirroring
+``core.algorithms.pipelined_chain_fused``.
+
+Lanes within a round are applied sequentially at trace level; builders
+guarantee no same-round read-after-write at any rank (the numpy simulator
+uses strict round-snapshot semantics, and the fused-vs-generic equality
+tests would catch a violation).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.schedules import Schedule
+
+__all__ = ["execute_collective", "fused_rsb_fused"]
+
+
+def _per_rank(values: np.ndarray, axis_name):
+    return jnp.asarray(values)[lax.axis_index(axis_name)]
+
+
+def _lanes(transfers):
+    """Partition a round's transfers into ppermute lanes: within one lane
+    each rank is a source at most once AND a destination at most once, and
+    all transfers share the combine flag. Multi-lane rounds (bidir chain,
+    fused_rsb) run on disjoint full-duplex links concurrently on TPU."""
+    lanes: list[list] = []
+    for t in transfers:
+        for lane in lanes:
+            if (
+                lane[0].combine == t.combine
+                and all(t.src != u.src and t.dst != u.dst for u in lane)
+            ):
+                lane.append(t)
+                break
+        else:
+            lanes.append([t])
+    return lanes
+
+
+def _execute_lane(transfers, buf, axis_name, n):
+    count = transfers[0].chunk_count
+    combine = transfers[0].combine
+    send_start = np.zeros(n, np.int32)
+    recv_start = np.zeros(n, np.int32)
+    is_dst = np.zeros(n, bool)
+    for t in transfers:
+        send_start[t.src] = t.chunk_start
+        recv_start[t.dst] = t.chunk_start
+        is_dst[t.dst] = True
+    perm = [(t.src, t.dst) for t in transfers]
+    s0 = _per_rank(send_start, axis_name)
+    operand = lax.dynamic_slice(buf, (s0, 0), (count, buf.shape[1]))
+    received = lax.ppermute(operand, axis_name, perm)
+    r0 = _per_rank(recv_start, axis_name)
+    current = lax.dynamic_slice(buf, (r0, 0), (count, buf.shape[1]))
+    on_dst = _per_rank(is_dst, axis_name)
+    if combine:
+        merged = current + jnp.where(on_dst, received, jnp.zeros_like(received))
+    else:
+        merged = jnp.where(on_dst, received, current)
+    return lax.dynamic_update_slice(buf, merged, (r0, 0))
+
+
+def execute_collective(schedule: Schedule, buf: jax.Array, axis_name) -> jax.Array:
+    """Replay any schedule over a ``(num_chunks, chunk_elems)`` buffer."""
+    assert buf.ndim == 2 and buf.shape[0] == schedule.num_chunks, (
+        buf.shape,
+        schedule.num_chunks,
+    )
+    n = schedule.n
+    for rnd in schedule.rounds:
+        if not rnd.transfers:
+            continue
+        for lane in _lanes(rnd.transfers):
+            buf = _execute_lane(lane, buf, axis_name, n)
+    return buf
+
+
+def fused_rsb_fused(buf: jax.Array, axis_name, *, root: int = 0, unroll: int = 1) -> jax.Array:
+    """Fused fori_loop executor for the fused_rsb allreduce chain.
+
+    ``buf``: (num_chunks, chunk_elems) — every rank's local contribution on
+    entry, the element-wise sum on exit at every rank. Emits exactly two
+    ppermutes (reduce lane + bcast lane) inside a loop of
+    ``num_chunks + 2n - 3`` rounds; equals the unrolled
+    ``comm.schedules.fused_rsb`` schedule transfer-for-transfer.
+    """
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return buf
+    K, chunk = buf.shape
+    pos = (lax.axis_index(axis_name) - root) % n
+    red_perm = [((root + p) % n, (root + p - 1) % n) for p in range(1, n)]
+    bc_perm = [((root + p) % n, (root + p + 1) % n) for p in range(n - 1)]
+
+    def body(s, b):
+        # operands read the round-start buffer; the two write chunks are
+        # disjoint whenever both are valid (see comm.schedules.fused_rsb)
+        c_rs = jnp.clip(s - (n - 1 - pos), 0, K - 1)
+        red_out = lax.dynamic_slice(b, (c_rs, 0), (1, chunk))
+        c_bs = jnp.clip(s - (n - 1) - pos, 0, K - 1)
+        bc_out = lax.dynamic_slice(b, (c_bs, 0), (1, chunk))
+        red_in = lax.ppermute(red_out, axis_name, red_perm)
+        bc_in = lax.ppermute(bc_out, axis_name, bc_perm)
+
+        c_rin = s - (n - 2) + pos           # chunk arriving on the reduce lane
+        red_valid = (pos <= n - 2) & (c_rin >= 0) & (c_rin < K)
+        c_rin_c = jnp.clip(c_rin, 0, K - 1)
+        cur = lax.dynamic_slice(b, (c_rin_c, 0), (1, chunk))
+        merged = jnp.where(red_valid, cur + red_in, cur)
+        b = lax.dynamic_update_slice(b, merged, (c_rin_c, 0))
+
+        c_bin = s - (n - 2) - pos           # chunk arriving on the bcast lane
+        bc_valid = (pos >= 1) & (c_bin >= 0) & (c_bin < K)
+        c_bin_c = jnp.clip(c_bin, 0, K - 1)
+        cur = lax.dynamic_slice(b, (c_bin_c, 0), (1, chunk))
+        merged = jnp.where(bc_valid, bc_in, cur)
+        return lax.dynamic_update_slice(b, merged, (c_bin_c, 0))
+
+    return lax.fori_loop(0, K + 2 * n - 3, body, buf, unroll=unroll)

@@ -1,0 +1,213 @@
+"""CollectivePlan: one tuned, inspectable decision + schedule per collective.
+
+A plan is the host-side artifact the consumers (trainer sync, serving weight
+distribution, hillclimb, benchmarks) share: which algorithm, how many chunks,
+the predicted time, and the concrete schedule — all decided BEFORE tracing,
+so the same object can be logged, costed, and executed. This is the "tuned
+tables decide every collective" layer of DESIGN.md Sec. 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from ..core import cost_model
+from ..core.schedules import ALGORITHMS, Schedule, build
+from ..core.tuner import OPS, Decision, Tuner, default_tuner
+from . import schedules as comm_schedules
+
+__all__ = ["CollectivePlan", "plan_collective", "decide", "expected_wire_bytes"]
+
+# one-shot XLA baselines (no schedule; lowered to a native collective),
+# and the ops each can legally implement — an op/one-shot mismatch must
+# raise like a schedule-based mismatch does (build_op KeyError), not
+# silently run the wrong collective
+ONE_SHOT = {"xla_psum", "xla_allgather"}
+_ONE_SHOT_OPS = {
+    "xla_psum": ("bcast", "reduce", "allreduce"),
+    "xla_allgather": ("bcast", "allgather"),
+}
+
+# ops whose schedules are pinned to num_chunks == n
+_N_CHUNK_ALGOS = {
+    "scatter_allgather",
+    "ring_allreduce",
+    "ring_allgather",
+    "doubling_allgather",
+    "ring_reduce_scatter",
+}
+
+_CHAIN_ALGOS = {"pipelined_chain", "bidir_chain", "pipelined_reduce_chain", "fused_rsb"}
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectivePlan:
+    """A fully-resolved collective: op + decision + executable schedule."""
+
+    op: str
+    M: int                      # full logical payload (bytes)
+    n: int
+    root: int
+    inter_pod: bool
+    decision: Decision
+    schedule: Schedule | None   # None for noop and the one-shot baselines
+
+    @property
+    def algo(self) -> str:
+        return self.decision.algo
+
+    @property
+    def num_chunks(self) -> int:
+        return self.decision.num_chunks
+
+    @property
+    def predicted_s(self) -> float:
+        return self.decision.predicted_s
+
+    def wire_bytes(self) -> int:
+        """Total bytes on the wire across all links (schedule accounting:
+        chunk-transfers x actual chunk size). One-shot baselines are priced
+        at their HLO equivalents: psum-bcast = 2M(n-1)/n-ish ring, gather =
+        n*M; noop = 0."""
+        if self.schedule is not None:
+            chunk_bytes = math.ceil(self.M / max(self.schedule.num_chunks, 1))
+            return self.schedule.wire_chunks() * chunk_bytes
+        if self.algo == "xla_psum":
+            return 2 * self.M * (self.n - 1)  # mask + all-reduce (ring both phases)
+        if self.algo == "xla_allgather":
+            return self.n * self.M
+        return 0
+
+    def timed_rounds_s(self, hw: cost_model.Hardware | None = None) -> float:
+        """Round-accurate simulator clock for this plan's schedule."""
+        from ..core.simulator import timed_rounds
+
+        if self.schedule is None:
+            return 0.0
+        hw = hw or cost_model.TPU_V5E
+        chunk_bytes = math.ceil(self.M / max(self.schedule.num_chunks, 1))
+        return timed_rounds(self.schedule, chunk_bytes, hw.ts, hw.path_bw(self.inter_pod))
+
+
+def decide(
+    op: str,
+    M: int,
+    n: int,
+    *,
+    algo: str = "auto",
+    num_chunks: int | None = None,
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+) -> Decision:
+    """Resolve (op, M, n) to a Decision. ``algo='auto'`` consults the tuner;
+    a manual algo gets analytic chunking AND an analytic ``predicted_s`` (so
+    manual and auto decisions are comparable in reports — the old bcast path
+    returned NaN here)."""
+    if op not in OPS:
+        raise ValueError(f"unknown collective op {op!r}; have {OPS}")
+    if algo in ONE_SHOT and op not in _ONE_SHOT_OPS[algo]:
+        raise ValueError(
+            f"one-shot {algo!r} cannot implement op {op!r} (valid for {_ONE_SHOT_OPS[algo]})"
+        )
+    t = tuner or default_tuner()
+    if n <= 1:
+        return Decision("noop", 1, max(M, 1), 0.0, "analytic")
+    if algo == "auto":
+        return t.select(M, n, op=op, inter_pod=inter_pod)
+    B = t.hw.path_bw(inter_pod)
+    if num_chunks is None:
+        if algo in ("pipelined_chain", "bidir_chain", "pipelined_reduce_chain"):
+            # per-algorithm analytic chunking (a generic fallback of 8 chunks
+            # made a 64-rank chain carry 5x extra fill/drain garbage —
+            # EXPERIMENTS.md §Perf pair 3)
+            hops = ((n - 1 + 1) // 2 + 1) if algo == "bidir_chain" else n
+            c_star = cost_model.optimal_chunk_bytes(M, hops, t.hw, B)
+            num_chunks = max(1, min(t.max_chunks, math.ceil(M / c_star)))
+        elif algo == "fused_rsb":
+            c_star = cost_model.optimal_chunk_bytes_fused(M, n, t.hw, B)
+            num_chunks = max(1, min(t.max_chunks, math.ceil(M / c_star)))
+        elif algo in _N_CHUNK_ALGOS:
+            num_chunks = n
+        elif algo == "reduce_then_bcast":
+            num_chunks = t.select(M, n, op="bcast", inter_pod=inter_pod).num_chunks
+        else:
+            num_chunks = 1
+    num_chunks = int(num_chunks)
+    chunk = math.ceil(M / max(1, num_chunks))
+    if algo in cost_model.ALGO_COSTS:
+        kw = {"C": float(chunk)} if algo in _CHAIN_ALGOS else {}
+        if algo == "reduce_then_bcast":
+            inner = t.select(M, n, op="bcast", inter_pod=inter_pod)
+            kw = {"t_bcast": inner.predicted_s}
+        predicted = cost_model.cost(algo, M, n, t.hw, inter_pod=inter_pod, **kw)
+    else:
+        predicted = float("nan")  # one-shot baselines have no Eq. 1-6 model
+    return Decision(algo, num_chunks, chunk, predicted, "manual")
+
+
+def plan_collective(
+    op: str,
+    M: int,
+    n: int,
+    *,
+    root: int = 0,
+    algo: str = "auto",
+    num_chunks: int | None = None,
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+) -> CollectivePlan:
+    """Decide + build the executable schedule for one collective."""
+    dec = decide(op, M, n, algo=algo, num_chunks=num_chunks, tuner=tuner, inter_pod=inter_pod)
+    t = tuner or default_tuner()
+    if dec.algo == "noop" or dec.algo in ONE_SHOT:
+        return CollectivePlan(op, M, n, root, inter_pod, dec, None)
+    if op == "bcast":
+        kw = {}
+        if dec.algo in ("pipelined_chain", "bidir_chain"):
+            kw["num_chunks"] = dec.num_chunks
+        elif dec.algo == "knomial":
+            kw["k"] = t.knomial_k
+        sched = build(dec.algo, n, root, **kw)
+    elif dec.algo == "reduce_then_bcast":
+        inner = decide("bcast", M, n, tuner=tuner, inter_pod=inter_pod)
+        if inner.algo in ONE_SHOT or inner.algo == "noop":
+            inner = dataclasses.replace(inner, algo="binomial", num_chunks=1)
+        kw = {}
+        if inner.algo in ("pipelined_chain", "bidir_chain"):
+            kw["num_chunks"] = inner.num_chunks
+        elif inner.algo == "knomial":
+            kw["k"] = t.knomial_k
+        bcast_sched = build(inner.algo, n, root, **kw)
+        sched = comm_schedules.reduce_then_bcast(n, root, bcast_sched)
+        dec = dataclasses.replace(dec, num_chunks=sched.num_chunks,
+                                  chunk_bytes=math.ceil(M / max(1, sched.num_chunks)))
+    else:
+        sched = comm_schedules.build_op(op, dec.algo, n, root, num_chunks=dec.num_chunks)
+        if sched.num_chunks != dec.num_chunks:
+            dec = dataclasses.replace(dec, num_chunks=sched.num_chunks,
+                                      chunk_bytes=math.ceil(M / max(1, sched.num_chunks)))
+    return CollectivePlan(op, M, n, root, inter_pod, dec, sched)
+
+
+def expected_wire_bytes(op: str, algo: str, M: int, n: int, num_chunks: int = 1) -> float:
+    """Closed-form bytes-on-wire accounting the property tests check the
+    schedule-level accounting (``CollectivePlan.wire_bytes``) against."""
+    if n <= 1 or algo == "noop":
+        return 0.0
+    chunk = math.ceil(M / max(1, num_chunks))
+    if algo == "scatter_allgather":
+        # (n/2)*log2(n) scatter chunk-sends + n*(n-1) ring chunk-sends
+        return ((n // 2) * int(math.log2(n)) + n * (n - 1)) * math.ceil(M / n)
+    if algo in ("ring_allgather", "ring_reduce_scatter"):
+        return n * (n - 1) * math.ceil(M / n)
+    if algo == "doubling_allgather":
+        return n * (n - 1) * math.ceil(M / n)  # sum_t n * 2^t = n (n - 1)
+    if algo == "ring_allreduce":
+        return 2 * n * (n - 1) * math.ceil(M / n)
+    if algo == "fused_rsb":
+        return 2 * (n - 1) * num_chunks * chunk
+    if algo == "reduce_then_bcast":
+        raise ValueError("composite: account the two phases separately")
+    # every tree/chain bcast (and its reduce mirror) moves the full message
+    # over exactly n-1 edges
+    return (n - 1) * num_chunks * chunk

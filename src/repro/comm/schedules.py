@@ -1,0 +1,236 @@
+"""Schedule builders for the non-broadcast collectives (DESIGN.md Sec. 3).
+
+Every builder emits a :class:`repro.core.schedules.Schedule` on the same IR
+the broadcast library uses — reduce-family transfers carry ``combine=True``
+and accumulate at the destination. The reduce builders are literal mirrors
+of their broadcast counterparts (rounds reversed, src/dst swapped), the
+allreduce builders compose reduce + broadcast phases, and the allgather /
+reduce_scatter rings generalize the two phases of the power-of-two
+``scatter_allgather`` broadcast (Eq. 4) to any rank count.
+
+Data conventions (buffer is ``(num_chunks, chunk_elems)`` everywhere):
+
+  * reduce / allreduce — every rank contributes its full buffer; on exit the
+    root (reduce) or every rank (allreduce) holds the element-wise sum.
+  * allgather — ``num_chunks == n``; rank r contributes row r; on exit every
+    rank holds all rows.
+  * reduce_scatter — ``num_chunks == n``; every rank contributes all rows;
+    on exit rank r's row r holds the sum of everyone's row r.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from ..core.schedules import (
+    Round,
+    Schedule,
+    Transfer,
+    binomial_reduce,
+    pipelined_chain,
+    _rot,
+)
+
+__all__ = [
+    "reverse_for_reduce",
+    "binomial_reduce",
+    "pipelined_reduce_chain",
+    "reduce_then_bcast",
+    "fused_rsb",
+    "ring_allreduce_schedule",
+    "ring_allgather",
+    "doubling_allgather",
+    "ring_reduce_scatter",
+    "OP_BUILDERS",
+    "build_op",
+]
+
+
+def reverse_for_reduce(sched: Schedule, name: str) -> Schedule:
+    """Mirror a bcast schedule into a reduce-to-root schedule: reverse the
+    rounds, swap src/dst, and mark every transfer combining. The chunk-level
+    pipelining (and therefore the cost model) carries over unchanged."""
+    rounds = tuple(
+        Round(tuple(
+            Transfer(t.dst, t.src, t.chunk_start, t.chunk_count, combine=True)
+            for t in r.transfers
+        ))
+        for r in reversed(sched.rounds)
+    )
+    return dataclasses.replace(sched, name=name, rounds=rounds, kind="reduce")
+
+
+def pipelined_reduce_chain(n: int, root: int = 0, num_chunks: int = 8) -> Schedule:
+    """Chunk-pipelined reduce-to-root: the paper's pipelined chain (Eq. 5)
+    reversed — partial sums stream toward the root one chunk per hop, so the
+    cost keeps Eq. 5's (M/C + n - 2)(ts + C/B) form."""
+    return reverse_for_reduce(
+        pipelined_chain(n, root, num_chunks), "pipelined_reduce_chain"
+    )
+
+
+def reduce_then_bcast(n: int, root: int, bcast_sched: Schedule) -> Schedule:
+    """Two-phase allreduce with a barrier: reversed-binomial reduce-to-root
+    over the whole buffer, then the tuned broadcast schedule (any algorithm,
+    any chunking). The reduce rounds move the full chunk range at once."""
+    num_chunks = bcast_sched.num_chunks
+    red = binomial_reduce(n, root)
+    red_rounds = tuple(
+        Round(tuple(
+            Transfer(t.src, t.dst, 0, num_chunks, combine=True)
+            for t in r.transfers
+        ))
+        for r in red.rounds
+    )
+    return Schedule(
+        f"reduce_then_bcast[{bcast_sched.name}]",
+        n,
+        root,
+        num_chunks,
+        red_rounds + bcast_sched.rounds,
+        kind="allreduce",
+    )
+
+
+def fused_rsb(n: int, root: int = 0, num_chunks: int = 8) -> Schedule:
+    """Fused pipelined reduce-chain + bcast-chain allreduce ("fused_rsb").
+
+    Logical chain positions 0 (the head, at ``root``) .. n-1. Chunk c's
+    partial sums hop head-ward, fully reduced at position 0 at round
+    c + n - 2; the head immediately streams it back tail-ward while later
+    chunks are still reducing. Round s carries, concurrently on the two
+    directions of each full-duplex link:
+
+      * reduce: edge p -> p-1 moves chunk s - (n - 1 - p)   (combine)
+      * bcast:  edge p -> p+1 moves chunk s - (n - 1) - p   (overwrite)
+
+    Total rounds: num_chunks + 2n - 3, matching t_fused_rsb in the cost
+    model. A destination appears twice in a round (one reduce chunk, one
+    bcast chunk) — the relaxed Round invariant allows it because the chunk
+    ranges are disjoint.
+    """
+    if n == 1:
+        return Schedule("fused_rsb", n, root, num_chunks, (), kind="allreduce")
+    rounds = []
+    for s in range(num_chunks + 2 * n - 3):
+        transfers = []
+        for p in range(1, n):  # reduce edge p -> p-1
+            c = s - (n - 1 - p)
+            if 0 <= c < num_chunks:
+                transfers.append(
+                    Transfer(_rot(p, root, n), _rot(p - 1, root, n), c, 1, combine=True)
+                )
+        for p in range(n - 1):  # bcast edge p -> p+1
+            c = s - (n - 1) - p
+            if 0 <= c < num_chunks:
+                transfers.append(
+                    Transfer(_rot(p, root, n), _rot(p + 1, root, n), c, 1)
+                )
+        if transfers:
+            rounds.append(Round(tuple(transfers)))
+    return Schedule("fused_rsb", n, root, num_chunks, tuple(rounds), kind="allreduce")
+
+
+def ring_allreduce_schedule(n: int, root: int = 0) -> Schedule:
+    """Bandwidth-optimal ring allreduce on the IR: n-1 combining
+    reduce-scatter rounds, then n-1 allgather rounds (``root`` is irrelevant
+    — the result is symmetric). ``num_chunks == n``; works for any n."""
+    if n == 1:
+        return Schedule("ring_allreduce", n, root, 1, (), kind="allreduce")
+    rounds = []
+    # reduce-scatter: round s, rank r sends its partial of chunk (r - s) mod n
+    # to r+1; after n-1 rounds rank r owns the full sum of chunk (r+1) mod n.
+    for s in range(n - 1):
+        rounds.append(Round(tuple(
+            Transfer(r, (r + 1) % n, (r - s) % n, 1, combine=True) for r in range(n)
+        )))
+    # allgather: circulate the reduced chunks.
+    for s in range(n - 1):
+        rounds.append(Round(tuple(
+            Transfer(r, (r + 1) % n, (r + 1 - s) % n, 1) for r in range(n)
+        )))
+    return Schedule("ring_allreduce", n, root, n, tuple(rounds), kind="allreduce")
+
+
+def ring_allgather(n: int, root: int = 0) -> Schedule:
+    """Ring allgather for ANY rank count — the generalization of the
+    power-of-two scatter_allgather bcast's second phase. Rank r starts
+    owning row r; round s moves row (r - s) mod n over edge r -> r+1."""
+    if n == 1:
+        return Schedule("ring_allgather", n, root, 1, (), kind="allgather")
+    rounds = tuple(
+        Round(tuple(Transfer(r, (r + 1) % n, (r - s) % n, 1) for r in range(n)))
+        for s in range(n - 1)
+    )
+    return Schedule("ring_allgather", n, root, n, rounds, kind="allgather")
+
+
+def doubling_allgather(n: int, root: int = 0) -> Schedule:
+    """Recursive-doubling allgather (power-of-two n): round t pairs rank r
+    with r XOR 2^t and exchanges the 2^t contiguous rows each side owns —
+    log2(n) startups for the same total bytes as the ring."""
+    if n & (n - 1):
+        raise ValueError(f"doubling_allgather requires power-of-two n, got {n}")
+    if n == 1:
+        return Schedule("doubling_allgather", n, root, 1, (), kind="allgather")
+    rounds = []
+    span = 1
+    while span < n:
+        transfers = []
+        for r in range(n):
+            base = (r // span) * span
+            transfers.append(Transfer(r, r ^ span, base, span))
+        rounds.append(Round(tuple(transfers)))
+        span *= 2
+    return Schedule("doubling_allgather", n, root, n, tuple(rounds), kind="allgather")
+
+
+def ring_reduce_scatter(n: int, root: int = 0) -> Schedule:
+    """Ring reduce-scatter for any n: n-1 combining rounds after which rank
+    r's row r holds the element-wise sum of everyone's row r."""
+    if n == 1:
+        return Schedule("ring_reduce_scatter", n, root, 1, (), kind="reduce_scatter")
+    rounds = tuple(
+        Round(tuple(
+            Transfer(r, (r + 1) % n, (r - s - 1) % n, 1, combine=True)
+            for r in range(n)
+        ))
+        for s in range(n - 1)
+    )
+    return Schedule("ring_reduce_scatter", n, root, n, rounds, kind="reduce_scatter")
+
+
+# ---------------------------------------------------------------------------
+# Registry (reduce_then_bcast is composite — built in plan.py, where the
+# inner bcast decision is available)
+# ---------------------------------------------------------------------------
+
+OP_BUILDERS: dict[str, dict[str, Callable[..., Schedule]]] = {
+    "reduce": {
+        "binomial_reduce": lambda n, root, num_chunks=1: binomial_reduce(n, root),
+        "pipelined_reduce_chain": pipelined_reduce_chain,
+    },
+    "allreduce": {
+        "fused_rsb": fused_rsb,
+        "ring_allreduce": lambda n, root, num_chunks=None: ring_allreduce_schedule(n, root),
+    },
+    "allgather": {
+        "ring_allgather": lambda n, root, num_chunks=None: ring_allgather(n, root),
+        "doubling_allgather": lambda n, root, num_chunks=None: doubling_allgather(n, root),
+    },
+    "reduce_scatter": {
+        "ring_reduce_scatter": lambda n, root, num_chunks=None: ring_reduce_scatter(n, root),
+    },
+}
+
+
+def build_op(op: str, algo: str, n: int, root: int = 0, *, num_chunks: int = 1) -> Schedule:
+    """Build + validate a non-bcast op schedule by name."""
+    try:
+        builder = OP_BUILDERS[op][algo]
+    except KeyError:
+        have = {o: sorted(a) for o, a in OP_BUILDERS.items()}
+        raise KeyError(f"no builder for op={op!r} algo={algo!r}; have {have}") from None
+    sched = builder(n, root, num_chunks=num_chunks)
+    sched.validate_ranks()
+    return sched

@@ -225,10 +225,21 @@ class RunConfig:
     warmup_steps: int = 100
     total_steps: int = 1000
     optimizer: str = "adamw"
-    # data-parallel sync mode: 'grad_allreduce' (modern baseline) or
-    # 'param_bcast' (the paper's CA-CNTK pattern through core.bcast)
+    # data-parallel sync mode: 'grad_allreduce' (modern baseline, GSPMD
+    # inserts the collective), 'param_bcast' (the paper's CA-CNTK pattern:
+    # reduce-to-root + tuned bcast through core.bcast), or
+    # 'tuned_allreduce' (the repro.comm plan layer: bucketed, hierarchical,
+    # per-op tuned allreduce — reduce_then_bcast/fused_rsb/ring windows)
     sync_mode: str = "grad_allreduce"
     bcast_algo: str = "auto"
+    # allreduce algorithm for sync_mode='tuned_allreduce': 'auto' consults
+    # the per-op tuner; or pin 'reduce_then_bcast' | 'fused_rsb' |
+    # 'ring_allreduce' | 'xla_psum'
+    allreduce_algo: str = "auto"
+    # path to a calibrated empirical table (Tuner.save format, e.g.
+    # experiments/allreduce_table.json from benchmarks/bench_allreduce.py);
+    # None = analytic decisions. Applies to both explicit sync modes.
+    tuner_table: Optional[str] = None
     bcast_bucket_bytes: int = 4 << 20
     num_microbatches: int = 1
     remat: bool = True

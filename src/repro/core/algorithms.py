@@ -1,10 +1,12 @@
-"""shard_map executors for broadcast/reduce schedules.
+"""Fused shard_map executors + XLA one-shot baselines for the bcast family.
 
-The generic executor (:func:`execute_schedule`) replays any
-:class:`core.schedules.Schedule` with one ``lax.ppermute`` per round. For the
-paper's pipelined chain a fused ``lax.fori_loop`` executor
-(:func:`pipelined_chain_fused`) emits a single ppermute in the loop body —
-this is the production path (compact HLO independent of chunk count).
+Generic schedule replay lives in :mod:`repro.comm.executors`
+(``execute_collective`` — one ``lax.ppermute`` per lane per round, all ops);
+:func:`execute_schedule` / :func:`execute_reduce_schedule` here are thin
+compatibility wrappers over it. For the paper's pipelined chain a fused
+``lax.fori_loop`` executor (:func:`pipelined_chain_fused`) emits a single
+ppermute in the loop body — the production path (compact HLO independent of
+chunk count); :func:`ring_allreduce` is its allreduce sibling.
 
 All functions here run *inside* ``jax.shard_map`` over a named axis. The
 buffer convention is ``(num_chunks, chunk_elems)``; every rank holds a buffer
@@ -16,8 +18,6 @@ Baselines ("the vendor library"): :func:`xla_psum_bcast` and
 stand-ins for NCCL's broadcast (see DESIGN.md Sec. 2).
 """
 from __future__ import annotations
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -39,77 +39,30 @@ def _axis_size(axis_name) -> int:
     return lax.axis_size(axis_name)
 
 
-def _per_rank(values: np.ndarray, axis_name):
-    """Trace-time table lookup: values[axis_index]."""
-    return jnp.asarray(values)[lax.axis_index(axis_name)]
-
-
-def _lanes(transfers):
-    """Partition a round's transfers into ppermute 'lanes': within one lane
-    each rank is a source at most once (destinations are unique per round by
-    construction). Multi-lane rounds (e.g. the bidirectional chain's root
-    feeding both directions) issue one ppermute per lane; on TPU these run
-    on disjoint full-duplex links concurrently."""
-    lanes: list[list] = []
-    for t in transfers:
-        for lane in lanes:
-            if all(t.src != u.src for u in lane):
-                lane.append(t)
-                break
-        else:
-            lanes.append([t])
-    return lanes
-
-
 def execute_schedule(schedule: Schedule, buf: jax.Array, axis_name) -> jax.Array:
-    """Replay a bcast schedule. ``buf``: (num_chunks, chunk_elems)."""
+    """Replay a bcast schedule. ``buf``: (num_chunks, chunk_elems).
+
+    Thin wrapper over the ONE generalized executor
+    (:func:`repro.comm.executors.execute_collective`) — kept for the
+    original API surface.
+    """
     if schedule.kind != "bcast":
         raise ValueError("use execute_reduce_schedule for reduce schedules")
-    n = schedule.n
-    assert buf.ndim == 2 and buf.shape[0] == schedule.num_chunks, buf.shape
-    for full_round in schedule.rounds:
-        if not full_round.transfers:
-            continue
-        for lane in _lanes(full_round.transfers):
-            buf = _execute_lane(lane, buf, axis_name, n)
-    return buf
+    from ..comm.executors import execute_collective
 
-
-def _execute_lane(transfers, buf, axis_name, n):
-    count = transfers[0].chunk_count
-    send_start = np.zeros(n, np.int32)
-    recv_start = np.zeros(n, np.int32)
-    is_dst = np.zeros(n, bool)
-    for t in transfers:
-        send_start[t.src] = t.chunk_start
-        recv_start[t.dst] = t.chunk_start
-        is_dst[t.dst] = True
-    perm = [(t.src, t.dst) for t in transfers]
-    s0 = _per_rank(send_start, axis_name)
-    operand = lax.dynamic_slice(buf, (s0, 0), (count, buf.shape[1]))
-    received = lax.ppermute(operand, axis_name, perm)
-    r0 = _per_rank(recv_start, axis_name)
-    current = lax.dynamic_slice(buf, (r0, 0), (count, buf.shape[1]))
-    received = jnp.where(_per_rank(is_dst, axis_name), received, current)
-    return lax.dynamic_update_slice(buf, received, (r0, 0))
+    return execute_collective(schedule, buf, axis_name)
 
 
 def execute_reduce_schedule(schedule: Schedule, buf: jax.Array, axis_name) -> jax.Array:
-    """Replay a reduce-to-root schedule (sum combiner). Whole-buffer transfers."""
+    """Replay a reduce-to-root schedule (sum combiner) over a whole buffer
+    of any shape. Wrapper over the generalized executor."""
     if schedule.kind != "reduce":
         raise ValueError("not a reduce schedule")
-    n = schedule.n
-    for rnd in schedule.rounds:
-        if not rnd.transfers:
-            continue
-        is_dst = np.zeros(n, bool)
-        for t in rnd.transfers:
-            is_dst[t.dst] = True
-        perm = [(t.src, t.dst) for t in rnd.transfers]
-        received = lax.ppermute(buf, axis_name, perm)
-        add = jnp.where(_per_rank(is_dst, axis_name), received, jnp.zeros_like(buf))
-        buf = buf + add
-    return buf
+    from ..comm.executors import execute_collective
+
+    shape = buf.shape
+    out = execute_collective(schedule, jnp.ravel(buf).reshape(1, -1), axis_name)
+    return out.reshape(shape)
 
 
 def pipelined_chain_fused(

@@ -1,26 +1,28 @@
-"""Public broadcast API — the paper's contribution as a composable JAX module.
+"""Public broadcast API — compatibility facade over ``repro.comm``.
 
-``pbcast`` is the collective itself (callable inside ``jax.shard_map``), with
-``algo='auto'`` routing through the tuning framework exactly like
-``MPI_Bcast`` routes through MVAPICH2-GDR's tuned tables. ``pbcast_tree``
-broadcasts a whole parameter pytree through same-dtype buckets, which is how
-the trainer's ``param_bcast`` sync mode uses it. ``preduce_sum`` is the
-mirror-image reduce-to-root. ``hierarchical_bcast`` composes per-axis bcasts
+Historically this module WAS the collective library; the plan/executor logic
+now lives in the :mod:`repro.comm` subsystem (see DESIGN.md Sec. 3) and
+these wrappers keep the original entry points stable: ``pbcast`` routes
+through the tuning framework exactly like ``MPI_Bcast`` routes through
+MVAPICH2-GDR's tuned tables, ``pbcast_tree`` broadcasts a parameter pytree
+through same-dtype buckets, ``preduce_sum`` is the mirror-image
+reduce-to-root, and ``hierarchical_bcast`` composes per-axis bcasts
 (intra-pod then inter-pod), mirroring MVAPICH2's hierarchical designs.
+
+New code should import from ``repro.comm`` directly — it also exposes the
+allreduce/allgather/reduce_scatter ops and the CollectivePlan layer.
 """
 from __future__ import annotations
 
-import math
 from functools import partial
 from typing import Any, Sequence
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
 
-from . import algorithms, bucketing, schedules
-from .tuner import Decision, Tuner, default_tuner
+from ..comm import api as _api
+from ..comm.plan import ONE_SHOT as _ONE_SHOT  # noqa: F401  (re-export for compat)
+from ..comm.plan import decide as _comm_decide
+from .tuner import Decision, Tuner
 
 __all__ = [
     "pbcast",
@@ -30,100 +32,17 @@ __all__ = [
     "bcast_stacked",
 ]
 
-_ONE_SHOT = {"xla_psum", "xla_allgather"}
+# direct delegations — signatures unchanged
+pbcast = _api.pbcast
+pbcast_tree = _api.pbcast_tree
 
 
 def _decide(M: int, n: int, algo: str, num_chunks, tuner: Tuner | None, inter_pod: bool) -> Decision:
-    if algo == "auto":
-        return (tuner or default_tuner()).select(M, n, inter_pod=inter_pod)
-    if num_chunks is None:
-        t = tuner or default_tuner()
-        if algo in ("pipelined_chain", "bidir_chain"):
-            # per-algorithm analytic chunking (a generic fallback of 8 chunks
-            # made a 64-rank chain carry 5x extra fill/drain garbage —
-            # EXPERIMENTS.md §Perf pair 3)
-            from . import cost_model as _cm
-
-            hops = ((n - 1 + 1) // 2 + 1) if algo == "bidir_chain" else n
-            c_star = _cm.optimal_chunk_bytes(M, hops, t.hw, t.hw.path_bw(inter_pod))
-            num_chunks = max(1, min(t.max_chunks, math.ceil(M / c_star)))
-        elif algo == "scatter_allgather":
-            num_chunks = n
-        else:
-            num_chunks = 1
-    return Decision(algo, int(num_chunks), math.ceil(M / max(1, int(num_chunks))), float("nan"), "manual")
-
-
-def pbcast(
-    x: jax.Array,
-    axis_name,
-    *,
-    root: int = 0,
-    algo: str = "auto",
-    num_chunks: int | None = None,
-    tuner: Tuner | None = None,
-    inter_pod: bool = False,
-    fused: bool = True,
-) -> jax.Array:
-    """Broadcast ``x`` from ``root`` over the named mesh axis.
-
-    Must be called inside ``shard_map``. Every rank passes a buffer of the
-    same shape/dtype; the return value equals the root's input on all ranks.
-    ``algo``: 'auto' (tuned), one of core.schedules.ALGORITHMS, or the
-    one-shot XLA baselines 'xla_psum' / 'xla_allgather'.
-    """
-    n = lax.axis_size(axis_name)
-    if n == 1:
-        return x
-    if algo == "xla_psum":
-        return algorithms.xla_psum_bcast(x, axis_name, root=root)
-    if algo == "xla_allgather":
-        return algorithms.xla_allgather_bcast(x, axis_name, root=root)
-
-    shape, dtype = x.shape, x.dtype
-    flat = jnp.ravel(x)
-    M = flat.size * flat.dtype.itemsize
-    dec = _decide(M, n, algo, num_chunks, tuner, inter_pod)
-    if dec.algo == "noop":
-        return x
-    k = max(1, min(dec.num_chunks, flat.size))
-    chunk_elems = -(-flat.size // k)  # ceil
-    pad = k * chunk_elems - flat.size
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype)])
-    buf = flat.reshape(k, chunk_elems)
-    out = algorithms.schedule_bcast(buf, axis_name, algo=dec.algo, root=root, fused=fused)
-    out = out.reshape(-1)
-    if pad:
-        out = out[: flat.size - pad]
-    return out.reshape(shape)
-
-
-def pbcast_tree(
-    tree: Any,
-    axis_name,
-    *,
-    root: int = 0,
-    algo: str = "auto",
-    tuner: Tuner | None = None,
-    bucket_bytes: int = 4 << 20,
-    inter_pod: bool = False,
-) -> Any:
-    """Broadcast a pytree via same-dtype buckets, each tuned independently.
-
-    The bucket mix reproduces the application regime of the paper (Sec. V-D):
-    a few large buckets (pipelined-chain / scatter-allgather territory) plus
-    a tail of small ones (k-nomial territory).
-    """
-    spec = bucketing.plan_buckets(tree, bucket_bytes)
-    buckets = bucketing.pack_buckets(tree, spec)
-    out = [
-        pbcast(b, axis_name, root=root, algo=algo, tuner=tuner, inter_pod=inter_pod)
-        if b.size
-        else b
-        for b in buckets
-    ]
-    return bucketing.unpack_buckets(out, spec)
+    """Legacy hook kept for callers/tests; manual decisions now carry an
+    analytic ``predicted_s`` instead of NaN (comm.plan.decide)."""
+    return _comm_decide(
+        "bcast", M, n, algo=algo, num_chunks=num_chunks, tuner=tuner, inter_pod=inter_pod
+    )
 
 
 def preduce_sum(x: jax.Array, axis_name, *, root: int = 0) -> jax.Array:
@@ -132,14 +51,7 @@ def preduce_sum(x: jax.Array, axis_name, *, root: int = 0) -> jax.Array:
     Non-root ranks return garbage partial sums by design (MPI_Reduce
     semantics) — only the root's output is meaningful.
     """
-    n = lax.axis_size(axis_name)
-    if n == 1:
-        return x
-    sched = schedules.binomial_reduce(n, root)
-    shape = x.shape
-    flat = jnp.ravel(x)
-    out = algorithms.execute_reduce_schedule(sched, flat.reshape(1, -1), axis_name)
-    return out.reshape(shape)
+    return _api.preduce(x, axis_name, root=root, algo="binomial_reduce")
 
 
 def hierarchical_bcast(
@@ -173,7 +85,7 @@ def hierarchical_bcast(
     if inter_pod_axes is None:
         inter_pod_axes = topology.INTER_POD_AXES
     for ax in axes:
-        x = pbcast(
+        x = _api.pbcast(
             x,
             ax,
             root=root,
@@ -208,7 +120,7 @@ def bcast_stacked(
     )
     def _run(block):
         sl = block[0]
-        out = pbcast(sl, axis_name, root=root, algo=algo, tuner=tuner)
+        out = _api.pbcast(sl, axis_name, root=root, algo=algo, tuner=tuner)
         return out[None]
 
     return _run(xs)

@@ -55,8 +55,11 @@ def plan_buckets(tree: Any, bucket_bytes: int = 4 << 20) -> BucketSpec:
     dtypes: list[Any] = []
     open_bucket: dict[Any, int] = {}  # dtype -> bucket idx still below budget
     for i, leaf in enumerate(leaves):
-        dt = jnp.asarray(leaf).dtype
-        nelem = int(np.prod(leaf.shape)) if leaf.shape else 1
+        # shape/dtype only — works on abstract leaves (ShapeDtypeStruct)
+        # so consumers can plan bucket mixes without materializing params
+        dt = leaf.dtype if hasattr(leaf, "dtype") else jnp.asarray(leaf).dtype
+        shape = tuple(getattr(leaf, "shape", ()))
+        nelem = int(np.prod(shape)) if shape else 1
         itemsize = np.dtype(dt).itemsize
         b = open_bucket.get(dt)
         if b is None or (sizes[b] + nelem) * itemsize > bucket_bytes:
@@ -64,7 +67,7 @@ def plan_buckets(tree: Any, bucket_bytes: int = 4 << 20) -> BucketSpec:
             sizes.append(0)
             dtypes.append(dt)
             open_bucket[dt] = b
-        metas.append(_LeafMeta(i, tuple(leaf.shape), dt, b, sizes[b]))
+        metas.append(_LeafMeta(i, shape, dt, b, sizes[b]))
         sizes[b] += nelem
     return BucketSpec(treedef, tuple(metas), tuple(sizes), tuple(dtypes))
 

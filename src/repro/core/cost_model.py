@@ -16,7 +16,15 @@ from __future__ import annotations
 import dataclasses
 import math
 
-__all__ = ["Hardware", "TPU_V5E", "CPU_SIM", "cost", "optimal_chunk_bytes", "ALGO_COSTS"]
+__all__ = [
+    "Hardware",
+    "TPU_V5E",
+    "CPU_SIM",
+    "cost",
+    "optimal_chunk_bytes",
+    "optimal_chunk_bytes_fused",
+    "ALGO_COSTS",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +153,80 @@ def optimal_chunk_bytes(M: float, n: int, hw: Hardware, B: float) -> float:
     return float(min(max(c, 1.0), M))
 
 
+# ---------------------------------------------------------------------------
+# Non-bcast collectives (repro.comm): closed forms for the per-op tuner.
+# M is always the FULL logical buffer (the bcast payload, the allreduce
+# gradient, the gathered allgather output) — shard sizes are M/n.
+# ---------------------------------------------------------------------------
+
+
+def t_fused_rsb(M: float, n: int, hw: Hardware, B: float, C: float | None = None) -> float:
+    """Fused pipelined reduce-chain + bcast-chain allreduce ("fused_rsb").
+
+    Chunk c is fully reduced at the chain head after n-1 hops and is
+    immediately streamed back down while later chunks are still reducing, so
+    the two phases overlap on the full-duplex links:
+
+        T = (M/C + 2n - 3) * (ts + C/B)
+    """
+    if n <= 1:
+        return 0.0
+    if C is None:
+        C = optimal_chunk_bytes_fused(M, n, hw, B)
+    C = min(max(C, 1.0), M)
+    num_chunks = math.ceil(M / C)
+    return (num_chunks + max(2 * n - 3, 0)) * (hw.ts + C / B)
+
+
+def optimal_chunk_bytes_fused(M: float, n: int, hw: Hardware, B: float) -> float:
+    """Minimizer of t_fused_rsb over C: C* = sqrt(M * ts * B / (2n - 3))."""
+    if n <= 1 or M <= 0:
+        return float(max(M, 1))
+    c = math.sqrt(M * hw.ts * B / max(2 * n - 3, 1))
+    return float(min(max(c, 1.0), M))
+
+
+def t_reduce_then_bcast(M: float, n: int, hw: Hardware, B: float, t_bcast: float | None = None) -> float:
+    """Two-phase allreduce: reversed-binomial reduce-to-root, barrier, then
+    the tuned broadcast (``t_bcast``; defaults to the binomial tree)."""
+    if n <= 1:
+        return 0.0
+    t_reduce = t_knomial(M, n, hw, B, k=2)
+    if t_bcast is None:
+        t_bcast = t_knomial(M, n, hw, B, k=2)
+    return t_reduce + t_bcast
+
+
+def t_ring_allreduce(M: float, n: int, hw: Hardware, B: float) -> float:
+    """Bandwidth-optimal ring: reduce-scatter (n-1 rounds) + allgather
+    (n-1 rounds), each round moving one M/n chunk per rank."""
+    if n <= 1:
+        return 0.0
+    return 2 * (n - 1) * (hw.ts + math.ceil(M / n) / B)
+
+
+def t_ring_allgather(M: float, n: int, hw: Hardware, B: float) -> float:
+    """Ring allgather: n-1 rounds of one M/n chunk per rank (any n)."""
+    if n <= 1:
+        return 0.0
+    return (n - 1) * (hw.ts + math.ceil(M / n) / B)
+
+
+def t_doubling_allgather(M: float, n: int, hw: Hardware, B: float) -> float:
+    """Recursive-doubling allgather (power-of-two n): log2(n) rounds whose
+    payload doubles each round — same bytes as the ring, log startups."""
+    if n <= 1:
+        return 0.0
+    return math.ceil(math.log2(n)) * hw.ts + (n - 1) / n * M / B
+
+
+def t_ring_reduce_scatter(M: float, n: int, hw: Hardware, B: float) -> float:
+    """Ring reduce-scatter: n-1 combining rounds of one M/n chunk per rank."""
+    if n <= 1:
+        return 0.0
+    return (n - 1) * (hw.ts + math.ceil(M / n) / B)
+
+
 def t_nccl_ring(M: float, n: int, hw: Hardware, B: float, slice_bytes: float = 256 << 10) -> float:
     """The NCCL-stand-in baseline: a pipelined ring with a FIXED slice size
     and no algorithm switching (what NCCL 1.x broadcast does). At small M the
@@ -167,6 +249,16 @@ ALGO_COSTS = {
     "scatter_allgather": t_scatter_allgather,
     "pipelined_chain": t_pipelined_chain,
     "bidir_chain": t_bidir_chain,
+    # reduce mirrors (same round structure, reversed)
+    "binomial_reduce": lambda M, n, hw, B: t_knomial(M, n, hw, B, k=2),
+    "pipelined_reduce_chain": t_pipelined_chain,
+    # allreduce / allgather / reduce_scatter (repro.comm ops)
+    "reduce_then_bcast": t_reduce_then_bcast,
+    "fused_rsb": t_fused_rsb,
+    "ring_allreduce": t_ring_allreduce,
+    "ring_allgather": t_ring_allgather,
+    "doubling_allgather": t_doubling_allgather,
+    "ring_reduce_scatter": t_ring_reduce_scatter,
 }
 
 

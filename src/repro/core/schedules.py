@@ -42,12 +42,19 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class Transfer:
-    """One point-to-point send of a contiguous chunk range."""
+    """One point-to-point send of a contiguous chunk range.
+
+    ``combine=True`` marks a reducing transfer: the receiver accumulates the
+    payload into its buffer (sum) instead of overwriting. This is the only
+    IR difference between broadcast-family and reduce-family collectives —
+    everything else (rounds, chunking, lanes) is shared.
+    """
 
     src: int
     dst: int
     chunk_start: int = 0
     chunk_count: int = 1
+    combine: bool = False
 
     def chunks(self) -> range:
         return range(self.chunk_start, self.chunk_start + self.chunk_count)
@@ -55,14 +62,29 @@ class Transfer:
 
 @dataclasses.dataclass(frozen=True)
 class Round:
-    """Transfers that are issued concurrently (one ppermute)."""
+    """Transfers that are issued concurrently (one ppermute per lane).
+
+    A destination may appear more than once in a round only if the incoming
+    chunk ranges are disjoint (e.g. the fused allreduce chain, where an
+    interior rank receives a reduce chunk and a bcast chunk concurrently on
+    its two full-duplex links)."""
 
     transfers: Tuple[Transfer, ...]
 
     def __post_init__(self):
-        dsts = [t.dst for t in self.transfers]
-        if len(dsts) != len(set(dsts)):
-            raise ValueError(f"duplicate destination in round: {self.transfers}")
+        by_dst: dict[int, list[Transfer]] = {}
+        for t in self.transfers:
+            by_dst.setdefault(t.dst, []).append(t)
+        for dst, ts in by_dst.items():
+            if len(ts) > 1:
+                seen: set[int] = set()
+                for t in ts:
+                    rng = set(t.chunks())
+                    if seen & rng:
+                        raise ValueError(
+                            f"overlapping chunk ranges for destination {dst}: {ts}"
+                        )
+                    seen |= rng
         counts = {t.chunk_count for t in self.transfers}
         if len(counts) > 1:
             raise ValueError(
@@ -84,7 +106,10 @@ class Schedule:
     root: int
     num_chunks: int
     rounds: Tuple[Round, ...]
-    # 'bcast' or 'reduce' (reduce combines into dst instead of overwriting)
+    # collective op this schedule implements: 'bcast' | 'reduce' |
+    # 'allreduce' | 'allgather' | 'reduce_scatter'. Reduce-family transfers
+    # carry combine=True (accumulate at dst); see repro.comm.schedules for
+    # the non-bcast builders.
     kind: str = "bcast"
 
     @property
@@ -277,7 +302,10 @@ def binomial_reduce(n: int, root: int = 0) -> Schedule:
     swapped. Transfers in a round are combined (summed) into the destination."""
     fwd = binomial(n, root)
     rounds = tuple(
-        Round(tuple(Transfer(t.dst, t.src, t.chunk_start, t.chunk_count) for t in r.transfers))
+        Round(tuple(
+            Transfer(t.dst, t.src, t.chunk_start, t.chunk_count, combine=True)
+            for t in r.transfers
+        ))
         for r in reversed(fwd.rounds)
     )
     return Schedule("binomial_reduce", n, root, 1, rounds, kind="reduce")

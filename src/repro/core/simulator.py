@@ -72,6 +72,33 @@ def simulate_reduce(schedule: Schedule, data: Sequence[np.ndarray]) -> list[np.n
     return bufs
 
 
+def simulate_collective(schedule: Schedule, data: Sequence[np.ndarray]) -> list[np.ndarray]:
+    """Value-level replay of ANY schedule (bcast/reduce/allreduce/allgather/
+    reduce_scatter): every transfer reads the sender's buffer as it was at
+    the *start* of the round (concurrent semantics), and either overwrites
+    the destination chunk range or — for ``combine=True`` transfers —
+    accumulates into it.
+
+    Correctness (including causality and double-counting) is checked by the
+    property tests comparing the result against numpy references on random
+    data; garbage sent too early or a contribution summed twice cannot
+    produce the reference value.
+    """
+    bufs = [np.array(d, copy=True) for d in data]
+    for rnd in schedule.rounds:
+        staged = [
+            (t, bufs[t.src][t.chunk_start : t.chunk_start + t.chunk_count].copy())
+            for t in rnd.transfers
+        ]
+        for t, payload in staged:
+            sl = slice(t.chunk_start, t.chunk_start + t.chunk_count)
+            if t.combine:
+                bufs[t.dst][sl] = bufs[t.dst][sl] + payload
+            else:
+                bufs[t.dst][sl] = payload
+    return bufs
+
+
 def check_complete(schedule: Schedule) -> None:
     """Assert every rank ends up owning every chunk (bcast completeness)."""
     n = schedule.n

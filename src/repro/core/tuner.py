@@ -1,7 +1,9 @@
 """The collective tuning framework (paper Sec. IV-B/IV-C, "MV2-GDR-Opt").
 
-Selects a broadcast algorithm and chunk size per (message size, rank count,
-path class), the way MVAPICH2-GDR's tuning tables do. Two sources combine:
+Selects an algorithm and chunk size per (op, message size, rank count,
+path class), the way MVAPICH2-GDR's tuning tables do — ``op`` covers the
+whole ``repro.comm`` collective family (bcast/reduce/allreduce/allgather/
+reduce_scatter), not just the paper's broadcast. Two sources combine:
 
   * the analytic cost models (Eqs. 1-6) with the target Hardware constants —
     always available;
@@ -21,7 +23,10 @@ from typing import Callable, Iterable, Sequence
 from . import cost_model
 from .cost_model import Hardware, TPU_V5E
 
-__all__ = ["Decision", "Tuner", "default_tuner"]
+__all__ = ["Decision", "Tuner", "default_tuner", "OPS"]
+
+# collective ops the tuner prices; 'bcast' keeps the legacy table-key format
+OPS = ("bcast", "reduce", "allreduce", "allgather", "reduce_scatter")
 
 
 def _is_pow2(n: int) -> bool:
@@ -30,7 +35,7 @@ def _is_pow2(n: int) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class Decision:
-    """A tuning decision for one (M, n) point."""
+    """A tuning decision for one (op, M, n) point."""
 
     algo: str
     num_chunks: int
@@ -49,6 +54,26 @@ _CANDIDATES: dict[str, Callable[[int, int], bool]] = {
     "pipelined_chain": lambda M, n: n >= 3 and M >= 4 * n,
     # beyond-paper bidirectional chain (full-duplex ICI)
     "bidir_chain": lambda M, n: n >= 4 and M >= 8 * n,
+}
+
+# per-op candidate sets for the non-bcast collectives (repro.comm)
+_OP_CANDIDATES: dict[str, dict[str, Callable[[int, int], bool]]] = {
+    "reduce": {
+        "binomial_reduce": lambda M, n: True,
+        "pipelined_reduce_chain": lambda M, n: n >= 3 and M >= 4 * n,
+    },
+    "allreduce": {
+        "reduce_then_bcast": lambda M, n: True,
+        "fused_rsb": lambda M, n: n >= 2 and M >= 4 * n,
+        "ring_allreduce": lambda M, n: n >= 3 and M >= 4 * n,
+    },
+    "allgather": {
+        "ring_allgather": lambda M, n: True,
+        "doubling_allgather": lambda M, n: _is_pow2(n),
+    },
+    "reduce_scatter": {
+        "ring_reduce_scatter": lambda M, n: True,
+    },
 }
 
 
@@ -102,17 +127,54 @@ class Tuner:
         t, algo, num_chunks = best
         return Decision(algo, num_chunks, math.ceil(M / num_chunks), t, "analytic")
 
+    def _analytic_op(self, op: str, M: int, n: int, inter_pod: bool) -> Decision:
+        """Analytic selection for the non-bcast collectives (repro.comm)."""
+        B = self.hw.path_bw(inter_pod)
+        best: tuple[float, str, int] | None = None
+        for algo, ok in _OP_CANDIDATES[op].items():
+            if not ok(M, n):
+                continue
+            if algo == "pipelined_reduce_chain":
+                c_star = cost_model.optimal_chunk_bytes(M, n, self.hw, B)
+                num_chunks = max(1, min(self.max_chunks, math.ceil(M / c_star)))
+                t = cost_model.t_pipelined_chain(M, n, self.hw, B, C=math.ceil(M / num_chunks))
+            elif algo == "reduce_then_bcast":
+                # barrier composite: reversed-binomial reduce + the tuned
+                # bcast. Priced via select() — NOT _analytic — so empirical
+                # bcast entries shape the price exactly as plan_collective
+                # builds the inner schedule.
+                bcast = self.select(M, n, op="bcast", inter_pod=inter_pod)
+                t = cost_model.t_knomial(M, n, self.hw, B, k=2) + bcast.predicted_s
+                num_chunks = bcast.num_chunks
+            elif algo == "fused_rsb":
+                c_star = cost_model.optimal_chunk_bytes_fused(M, n, self.hw, B)
+                num_chunks = max(1, min(self.max_chunks, math.ceil(M / c_star)))
+                t = cost_model.t_fused_rsb(M, n, self.hw, B, C=math.ceil(M / num_chunks))
+            elif algo in ("ring_allreduce", "ring_allgather", "doubling_allgather", "ring_reduce_scatter"):
+                t = cost_model.cost(algo, M, n, self.hw, inter_pod=inter_pod)
+                num_chunks = n
+            else:  # binomial_reduce and any whole-message mirror
+                t = cost_model.cost(algo, M, n, self.hw, inter_pod=inter_pod)
+                num_chunks = 1
+            if best is None or t < best[0]:
+                best = (t, algo, num_chunks)
+        assert best is not None, f"no applicable {op} algorithm for (M={M}, n={n})"
+        t, algo, num_chunks = best
+        return Decision(algo, num_chunks, math.ceil(M / num_chunks), t, "analytic")
+
     # -- empirical table ----------------------------------------------------
 
     @staticmethod
     def _bucket(M: int) -> int:
         return max(0, int(math.log2(max(M, 1))))
 
-    def _key(self, M: int, n: int, inter_pod: bool) -> str:
-        return f"{n}:{self._bucket(M)}:{int(inter_pod)}"
+    def _key(self, M: int, n: int, inter_pod: bool, op: str = "bcast") -> str:
+        # bcast keeps the legacy key format so existing saved tables load
+        base = f"{n}:{self._bucket(M)}:{int(inter_pod)}"
+        return base if op == "bcast" else f"{op}:{base}"
 
-    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False) -> None:
-        key = self._key(M, n, inter_pod)
+    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast") -> None:
+        key = self._key(M, n, inter_pod, op)
         prev = self.table.get(key)
         if prev is None or measured_s < prev["measured_s"]:
             self.table[key] = {
@@ -128,13 +190,18 @@ class Tuner:
         n: int,
         *,
         inter_pod: bool = False,
+        op: str = "bcast",
     ) -> None:
         """Populate the table: ``measure(algo, M, n, num_chunks) -> seconds``."""
+        if op == "bcast":
+            candidates = {a: _CANDIDATES[a] for a in self.allow if a in _CANDIDATES}
+        else:
+            candidates = _OP_CANDIDATES[op]
         for M in sizes:
-            for algo in self.allow:
-                if not _CANDIDATES.get(algo, lambda *_: False)(M, n):
+            for algo, applicable in candidates.items():
+                if not applicable(M, n):
                     continue
-                if algo == "pipelined_chain":
+                if algo in ("pipelined_chain", "pipelined_reduce_chain", "fused_rsb"):
                     chunk_opts = sorted(
                         {
                             max(1, min(self.max_chunks, math.ceil(M / c)))
@@ -142,18 +209,28 @@ class Tuner:
                             if c and c > 0
                         }
                     )
+                elif algo in ("scatter_allgather", "ring_allreduce", "ring_allgather",
+                              "doubling_allgather", "ring_reduce_scatter"):
+                    chunk_opts = [n]
+                elif algo == "reduce_then_bcast":
+                    chunk_opts = [self.select(M, n, inter_pod=inter_pod).num_chunks]
                 else:
-                    chunk_opts = [n if algo == "scatter_allgather" else 1]
+                    chunk_opts = [1]
                 for k in chunk_opts:
                     t = measure(algo, M, n, k)
-                    self.record(M, n, algo, k, t, inter_pod=inter_pod)
+                    self.record(M, n, algo, k, t, inter_pod=inter_pod, op=op)
 
     # -- public -------------------------------------------------------------
 
-    def select(self, M: int, n: int, *, inter_pod: bool = False) -> Decision:
+    def select(self, M: int, n: int, *, op: str = "bcast", inter_pod: bool = False) -> Decision:
+        """Tuned decision for one collective: op in :data:`OPS` (default
+        'bcast' — the legacy single-op signature is unchanged). Empirical
+        table entries are keyed per-op and override the analytic choice."""
+        if op not in OPS:
+            raise ValueError(f"unknown collective op {op!r}; have {OPS}")
         if n <= 1:
             return Decision("noop", 1, max(M, 1), 0.0, "analytic")
-        hit = self.table.get(self._key(M, n, inter_pod))
+        hit = self.table.get(self._key(M, n, inter_pod, op))
         if hit is not None:
             return Decision(
                 hit["algo"],
@@ -162,7 +239,9 @@ class Tuner:
                 float(hit["measured_s"]),
                 "empirical",
             )
-        return self._analytic(M, n, inter_pod)
+        if op == "bcast":
+            return self._analytic(M, n, inter_pod)
+        return self._analytic_op(op, M, n, inter_pod)
 
     # -- persistence ---------------------------------------------------------
 
@@ -181,11 +260,29 @@ class Tuner:
     def load(cls, path: str, hw: Hardware = TPU_V5E) -> "Tuner":
         with open(path) as f:
             payload = json.load(f)
+        table = payload.get("table", {})
+        # schema gate: a rotten empirical table must fail here, not at trace
+        # time deep inside a train step (see repro.comm.tables for the
+        # experiments/ artifact loaders with the same policy)
+        known = set(cost_model.ALGO_COSTS) | {"noop", "xla_psum", "xla_allgather"}
+        for key, entry in table.items():
+            if not isinstance(entry, dict) or not {"algo", "num_chunks", "measured_s"} <= set(entry):
+                raise ValueError(
+                    f"{path}: entry {key!r} must have algo/num_chunks/measured_s, got {entry!r}"
+                )
+            if entry["algo"] not in known:
+                raise ValueError(f"{path}: entry {key!r} has unknown algo {entry['algo']!r}")
+            if not isinstance(entry["num_chunks"], int) or entry["num_chunks"] < 1:
+                raise ValueError(f"{path}: entry {key!r} num_chunks must be a positive int")
+            if not isinstance(entry["measured_s"], (int, float)) or not math.isfinite(
+                entry["measured_s"]
+            ):
+                raise ValueError(f"{path}: entry {key!r} measured_s must be finite")
         return cls(
             hw,
             max_chunks=payload.get("max_chunks", 64),
             knomial_k=payload.get("knomial_k", 4),
-            table=payload.get("table", {}),
+            table=table,
         )
 
 

@@ -4,12 +4,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Hillclimb pair 3 — the paper's own technique, measured from lowered HLO.
 
-Lowers the FULL param_bcast train step (xlstm-350m, train_4k tokens) on a
-pure data-parallel mesh for each broadcast algorithm, and reports the sync
-stage's collective footprint: wire bytes (bandwidth term) and collective op
-count x t_s (the launch/latency term the paper's small-message wins come
-from). 'xla_psum' is the one-shot NCCL-style baseline; 'pipelined_chain' is
-the paper's contribution; 'bidir_chain' is our beyond-paper variant.
+Lowers the FULL explicit-sync train step (xlstm-350m, train_4k tokens) on a
+pure data-parallel mesh for each collective configuration, and reports the
+sync stage's collective footprint: wire bytes (bandwidth term) and
+collective op count x t_s (the launch/latency term the paper's
+small-message wins come from). 'xla_psum' is the one-shot NCCL-style
+baseline; 'pipelined_chain' is the paper's contribution; 'bidir_chain' is
+our beyond-paper variant; 'ar:<algo>' entries lower the
+sync_mode='tuned_allreduce' step through the repro.comm plan layer
+(ar:auto / ar:fused_rsb / ar:ring_allreduce / ...). Each row also carries
+the PLANNED footprint (CollectivePlan wire-bytes and predicted time for the
+same bucket mix) next to the measured-from-HLO numbers.
 
     PYTHONPATH=src python -m repro.launch.hillclimb_bcast [--ranks 64]
 """
@@ -19,29 +24,73 @@ import json
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import comm
 from repro.analysis.roofline import analyze_compiled
 from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import RunConfig
+from repro.core import bucketing
 from repro.core.cost_model import TPU_V5E
 from repro.models import Model
 from repro.optim.optimizers import get_optimizer
 from repro.optim.schedules import warmup_cosine
-from repro.train.train_step import make_bcast_train_step
+from repro.train.train_step import make_bcast_train_step, make_tuned_allreduce_train_step
+
+
+def planned_footprint(model, *, ranks: int, bucket_bytes: int, op: str, algo: str):
+    """Host-side CollectivePlan accounting for the gradient bucket mix —
+    what the comm layer PLANS to put on the wire, next to what the lowered
+    HLO actually contains."""
+    grads_like = model.param_shapes()
+    spec = bucketing.plan_buckets(grads_like, bucket_bytes)
+    plans = [
+        comm.plan_collective(op, M, ranks, algo=algo)
+        for M in spec.bucket_bytes()
+        if M
+    ]
+    return {
+        "planned_algos": sorted({p.algo for p in plans}),
+        "planned_wire_bytes": sum(p.wire_bytes() for p in plans),
+        "planned_time_ms": sum(p.predicted_s for p in plans) * 1e3,
+        "num_buckets": len(plans),
+    }
 
 
 def lower_algo(algo: str, *, ranks: int, seq: int, batch: int, bucket_mb: int):
     mesh = jax.make_mesh((ranks,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
     cfg = get_config("xlstm-350m")
     model = Model(cfg)
-    run = RunConfig(
-        sync_mode="param_bcast",
-        bcast_algo=algo,
-        bcast_bucket_bytes=bucket_mb << 20,
-        num_microbatches=1,
-        remat=True,
-    )
     opt = get_optimizer("adamw")
-    step = make_bcast_train_step(model, run, opt, warmup_cosine(3e-4, 100, 1000), mesh)
+    lr_fn = warmup_cosine(3e-4, 100, 1000)
+    if algo.startswith("ar:"):
+        run = RunConfig(
+            sync_mode="tuned_allreduce",
+            allreduce_algo=algo[3:],
+            bcast_bucket_bytes=bucket_mb << 20,
+            num_microbatches=1,
+            remat=True,
+        )
+        step = make_tuned_allreduce_train_step(model, run, opt, lr_fn, mesh)
+        planned = planned_footprint(
+            model, ranks=ranks, bucket_bytes=bucket_mb << 20,
+            op="allreduce", algo=algo[3:],
+        )
+    else:
+        run = RunConfig(
+            sync_mode="param_bcast",
+            bcast_algo=algo,
+            bcast_bucket_bytes=bucket_mb << 20,
+            num_microbatches=1,
+            remat=True,
+        )
+        step = make_bcast_train_step(model, run, opt, lr_fn, mesh)
+        planned = (
+            planned_footprint(
+                model, ranks=ranks, bucket_bytes=bucket_mb << 20,
+                op="bcast", algo=algo,
+            )
+            if algo not in ("xla_psum", "xla_allgather", "ring_allreduce")
+            else {}
+        )
 
     params_shapes = model.param_shapes()
     opt_shapes = jax.eval_shape(opt.init, params_shapes)
@@ -77,6 +126,7 @@ def lower_algo(algo: str, *, ranks: int, seq: int, batch: int, bucket_mb: int):
         "by_family": rep.wire_by_family,
         "counts": rep.collective_counts,
         "peak_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 2**30,
+        **planned,
     }
 
 
@@ -86,7 +136,11 @@ def main():
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--seq", type=int, default=4096)
     ap.add_argument("--bucket-mb", type=int, default=2048)
-    ap.add_argument("--algos", default="xla_psum,binomial,pipelined_chain,bidir_chain,scatter_allgather,auto")
+    ap.add_argument(
+        "--algos",
+        default="xla_psum,binomial,pipelined_chain,bidir_chain,scatter_allgather,auto,"
+                "ar:auto,ar:fused_rsb,ar:ring_allreduce,ar:reduce_then_bcast",
+    )
     ap.add_argument("--out", default="experiments/hillclimb_bcast.json")
     args = ap.parse_args()
 

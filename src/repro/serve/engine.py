@@ -15,12 +15,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import comm
 from ..configs.base import ModelConfig
 from ..dist import topology
 from ..dist.sharding import cache_specs, param_specs
 from ..models import Model
 
-__all__ = ["Engine", "GenerationResult", "distribute_weights"]
+__all__ = ["Engine", "GenerationResult", "distribute_weights", "plan_distribution"]
 
 
 def _placements(mesh, specs):
@@ -109,24 +110,58 @@ class Engine:
         )
 
 
-def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=None):
+def plan_distribution(params, mesh, *, algo: str = "auto", tuner=None,
+                      bucket_bytes: int = 4 << 20):
+    """Host-side planning for weight distribution: pack the parameter tree
+    into same-dtype buckets and resolve one :class:`~repro.comm.
+    CollectivePlan` per (bucket, mesh level) — inter-pod level first, priced
+    with the tuner's ``inter_pod`` constants. Returns ``(bucket_spec,
+    {axis_name: [plan per bucket]})``; the plans are inspectable (algorithm,
+    chunking, predicted time, bytes on wire) before anything is traced."""
+    from ..core import bucketing
+
+    spec = bucketing.plan_buckets(params, bucket_bytes)
+    sizes = topology.axis_sizes(mesh)
+    plans = {}
+    for ax in topology.bcast_axes(mesh):
+        n = sizes[ax]
+        plans[ax] = [
+            comm.plan_collective(
+                "bcast", M, n, algo=algo, tuner=tuner,
+                inter_pod=topology.is_inter_pod(ax),
+            )
+            for M in spec.bucket_bytes()
+        ]
+    return spec, plans
+
+
+def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=None,
+                       bucket_bytes: int = 4 << 20, return_plans: bool = False):
     """Broadcast freshly-loaded weights across the data axes with the tuned
     library (the paper's 'training parameters exchange' applied at load).
 
-    The broadcast runs hierarchically per ``dist.topology.bcast_axes(mesh)``
-    — inter-pod level first when a pod axis exists, priced with the tuner's
-    ``inter_pod`` constants. When ``specs`` (a ``param_specs`` tree) is
-    given, the replicated result is then laid out per those specs, so the
-    weights land exactly where the serving/training layout declares."""
-    from ..core.bcast import pbcast_tree
+    The collective sequence is fully planned host-side
+    (:func:`plan_distribution`) and the shard_map program replays those
+    plans verbatim via ``comm.apply_plan`` — hierarchically per
+    ``dist.topology.bcast_axes(mesh)``, inter-pod level first when a pod
+    axis exists. When ``specs`` (a ``param_specs`` tree) is given, the
+    replicated result is then laid out per those specs, so the weights land
+    exactly where the serving/training layout declares. ``return_plans=True``
+    additionally returns the executed plan table."""
+    from ..core import bucketing
 
-    axes = topology.bcast_axes(mesh)
+    bucket_spec, plans = plan_distribution(
+        params, mesh, algo=algo, tuner=tuner, bucket_bytes=bucket_bytes
+    )
 
     def run(p):
-        for ax in axes:
-            p = pbcast_tree(p, ax, algo=algo, tuner=tuner,
-                            inter_pod=topology.is_inter_pod(ax))
-        return p
+        buckets = bucketing.pack_buckets(p, bucket_spec)
+        for ax, ax_plans in plans.items():
+            buckets = [
+                comm.apply_plan(plan, b, ax) if b.size else b
+                for plan, b in zip(ax_plans, buckets)
+            ]
+        return bucketing.unpack_buckets(buckets, bucket_spec)
 
     f = jax.shard_map(
         run,
@@ -138,4 +173,4 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
     out = jax.jit(f)(params)
     if specs is not None:
         out = jax.device_put(out, _placements(mesh, specs))
-    return out
+    return (out, plans) if return_plans else out

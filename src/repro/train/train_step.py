@@ -1,6 +1,6 @@
 """Train-step factories.
 
-Two data-parallel synchronization modes (DESIGN.md Sec. 4):
+Three data-parallel synchronization modes (DESIGN.md Sec. 4):
 
 * ``grad_allreduce`` — the modern baseline: pjit/GSPMD inserts the gradient
   all-reduce (and FSDP all-gathers/reduce-scatters) automatically. This is
@@ -15,6 +15,13 @@ Two data-parallel synchronization modes (DESIGN.md Sec. 4):
   byte-identical traffic and the same collective, but every rank can then
   apply the optimizer deterministically, keeping per-rank optimizer state
   coherent (CNTK keeps the optimizer on the root instead).
+
+* ``tuned_allreduce`` — the follow-up-work pattern (Awan et al. 1810.11112,
+  Mamidala 1802.06949): gradients sync through the ``repro.comm`` allreduce
+  plan layer — bucketed (``core.bucketing``), hierarchical over the
+  ``dist.topology`` data axes (intra-pod level first, the pod level priced
+  with inter-pod constants), per-bucket algorithm selected by the per-op
+  tuner (reduce_then_bcast / fused_rsb / ring_allreduce windows).
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..comm import hierarchical_allreduce_axes, pallreduce_tree
 from ..configs.base import RunConfig
 from ..core.algorithms import ring_allreduce
 from ..core.bcast import pbcast_tree, preduce_sum
@@ -32,7 +40,7 @@ from ..core.tuner import Tuner
 from ..launch.mesh import dp_axes
 from ..optim.optimizers import Optimizer, clip_by_global_norm
 
-__all__ = ["make_train_step", "make_bcast_train_step"]
+__all__ = ["make_train_step", "make_bcast_train_step", "make_tuned_allreduce_train_step"]
 
 
 def _microbatch(batch, k: int):
@@ -147,6 +155,12 @@ def make_bcast_train_step(
         out.update({k: jax.lax.pmean(v, dp) for k, v in metrics.items()})
         return params, opt_state, out
 
+    return _wrap_dp_step(local_step, mesh, dp)
+
+
+def _wrap_dp_step(local_step, mesh, dp):
+    """shard_map wrapper shared by the explicit-sync modes: params/opt state
+    replicated, batch sharded over the data axes, outputs replicated."""
     replicated = P()
 
     def batch_spec(x):
@@ -170,3 +184,57 @@ def make_bcast_train_step(
         return fn(params, opt_state, batch)
 
     return train_step
+
+
+def make_tuned_allreduce_train_step(
+    model,
+    run_cfg: RunConfig,
+    optimizer: Optimizer,
+    lr_fn: Callable,
+    mesh,
+    *,
+    tuner: Tuner | None = None,
+):
+    """Gradient sync through the ``repro.comm`` collective-plan subsystem.
+
+    Per-rank gradients are packed into same-dtype buckets and all-reduced
+    hierarchically: intra-pod data axes first, then the pod level with
+    inter-pod pricing (``comm.hierarchical_allreduce_axes``). Each bucket's
+    algorithm/chunking is a per-op ``CollectivePlan`` decision — set
+    ``run_cfg.allreduce_algo`` to pin one. Pure-DP like ``param_bcast``
+    (model axis size 1), and produces the same update as ``grad_allreduce``
+    up to float summation order.
+    """
+    from ..dist import topology
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    assert axis_sizes.get("model", 1) == 1, "tuned_allreduce mode is pure-DP"
+    dp = dp_axes(mesh)
+    assert len(dp) >= 1
+    compute = _grad_fn(model, run_cfg)
+    n_dp = 1
+    for a in dp:
+        n_dp *= axis_sizes[a]
+    axes = [a for a in hierarchical_allreduce_axes(mesh) if axis_sizes.get(a, 1) > 1]
+    inter_pod_axes = topology.inter_pod_axes(mesh)
+
+    def local_step(params, opt_state, batch):
+        loss, metrics, grads = compute(params, batch)
+        grads = pallreduce_tree(
+            grads,
+            axes,
+            algo=run_cfg.allreduce_algo,
+            tuner=tuner,
+            bucket_bytes=run_cfg.bcast_bucket_bytes,
+            inter_pod_axes=inter_pod_axes,
+        )
+        grads = jax.tree.map(lambda g: g / n_dp, grads)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = lr_fn(opt_state["step"])
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        loss = jax.lax.pmean(loss, dp)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out.update({k: jax.lax.pmean(v, dp) for k, v in metrics.items()})
+        return params, opt_state, out
+
+    return _wrap_dp_step(local_step, mesh, dp)

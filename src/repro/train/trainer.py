@@ -18,7 +18,11 @@ from ..models import Model
 from ..optim.optimizers import get_optimizer
 from ..optim.schedules import warmup_cosine
 from . import checkpoint as ckpt_lib
-from .train_step import make_bcast_train_step, make_train_step
+from .train_step import (
+    make_bcast_train_step,
+    make_train_step,
+    make_tuned_allreduce_train_step,
+)
 
 __all__ = ["Trainer"]
 
@@ -45,9 +49,18 @@ class Trainer:
 
     def _build(self):
         mesh = self.mesh
-        if self.run.sync_mode == "param_bcast":
-            step_fn = make_bcast_train_step(
-                self.model, self.run, self.optimizer, self.lr_fn, mesh
+        explicit_sync = {
+            "param_bcast": make_bcast_train_step,
+            "tuned_allreduce": make_tuned_allreduce_train_step,
+        }
+        if self.run.sync_mode in explicit_sync:
+            # calibrated empirical decisions (Tuner.save format) when the
+            # run points at a table; analytic otherwise
+            from ..core.tuner import Tuner
+
+            tuner = Tuner.load(self.run.tuner_table) if self.run.tuner_table else None
+            step_fn = explicit_sync[self.run.sync_mode](
+                self.model, self.run, self.optimizer, self.lr_fn, mesh, tuner=tuner
             )
             self._pspecs = jax.tree.map(
                 lambda _: P(), self.model.param_shapes()

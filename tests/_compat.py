@@ -15,7 +15,7 @@ strategy first, then fixed-seed pseudo-random draws.  Runs are identical
 across machines and invocations (no shrinking, no database, no deadlines).
 
 Only the strategy combinators this suite uses are implemented:
-``integers``, ``sampled_from``, ``lists``.
+``integers``, ``sampled_from``, ``booleans``, ``lists``.
 """
 from __future__ import annotations
 
@@ -65,6 +65,14 @@ class _SampledFrom(_Strategy):
 
     def draw(self, rng):
         return self.elements[int(rng.randint(len(self.elements)))]
+
+
+class _Booleans(_Strategy):
+    def boundary(self):
+        return [False, True]
+
+    def draw(self, rng):
+        return bool(rng.randint(2))
 
 
 class _Lists(_Strategy):
@@ -146,6 +154,7 @@ def settings(max_examples: int | None = None, deadline=None, **_ignored):
 strategies = types.SimpleNamespace(
     integers=lambda min_value, max_value: _Integers(min_value, max_value),
     sampled_from=_SampledFrom,
+    booleans=_Booleans,
     lists=lambda elem, *, min_size=0, max_size=10: _Lists(
         elem, min_size=min_size, max_size=max_size
     ),
