@@ -109,9 +109,11 @@ print(json.dumps(res))
                 }
             )
     os.makedirs("experiments", exist_ok=True)
-    calibrated.save("experiments/allreduce_table.json")
+    # dryrun tables are branded so Tuner.load refuses to seed empirical
+    # decisions from simulator stand-ins (allow_dryrun only schema-checks)
+    calibrated.save("experiments/allreduce_table.json", dryrun=dryrun)
     # round-trip through the persistence layer as a schema gate
-    Tuner.load("experiments/allreduce_table.json")
+    Tuner.load("experiments/allreduce_table.json", allow_dryrun=dryrun)
     return out
 
 

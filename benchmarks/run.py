@@ -5,6 +5,7 @@
   fig3: VGG/CNTK application-level data-parallel sync   (paper Fig. 3)
   tuner: the tuning-framework crossover table           (paper Sec. IV-B)
   allreduce: gradient-sync strategies + per-op empirical table (repro.comm)
+  overlap: bucket-streamed sync, planned vs simulated   (comm.overlap)
 
 Prints ``name,us_per_call,derived`` CSV; also writes experiments/bench.json
 (and the tuner/allreduce suites their experiments/*_table.json artifacts —
@@ -35,6 +36,7 @@ def main() -> None:
         bench_allreduce,
         bench_internode,
         bench_intranode,
+        bench_overlap,
         bench_tuner_table,
         bench_vgg_cntk,
     )
@@ -42,6 +44,7 @@ def main() -> None:
     suites = {
         "tuner": bench_tuner_table.rows,
         "allreduce": bench_allreduce.rows,
+        "overlap": bench_overlap.rows,
         "fig1": bench_intranode.rows,
         "fig2": bench_internode.rows,
         "fig3": bench_vgg_cntk.rows,

@@ -31,8 +31,21 @@ from .api import (
     preduce_scatter,
 )
 from .executors import execute_collective, fused_rsb_fused
+from .overlap import (
+    OverlapPlan,
+    execute_overlap,
+    overlap_allreduce_tree,
+    plan_overlap,
+    simulate_overlap,
+)
 from .plan import CollectivePlan, decide, expected_wire_bytes, plan_collective
-from .tables import TableSchemaError, load_bench, load_tuner_table, tuner_from_table
+from .tables import (
+    TableSchemaError,
+    load_bench,
+    load_overlap_table,
+    load_tuner_table,
+    tuner_from_table,
+)
 
 __all__ = [
     "OPS",
@@ -54,8 +67,14 @@ __all__ = [
     "pallgather",
     "pallreduce_tree",
     "hierarchical_allreduce_axes",
+    "OverlapPlan",
+    "plan_overlap",
+    "simulate_overlap",
+    "execute_overlap",
+    "overlap_allreduce_tree",
     "TableSchemaError",
     "load_tuner_table",
     "load_bench",
+    "load_overlap_table",
     "tuner_from_table",
 ]

@@ -44,14 +44,41 @@ def _flat(x: jax.Array):
     return flat, flat.size * flat.dtype.itemsize
 
 
-def _chunked(flat: jax.Array, k: int):
+# Reduce-family combiners the comm layer understands. The schedule executors
+# (execute_collective / fused_rsb_fused) implement SUM only; max/min route to
+# the XLA one-shot collectives. Identity elements justify the pad tail a
+# non-divisible buffer grows before chunking: a pad lane must never perturb
+# the combined value (zeros are only sound for sum — the original bug).
+_COMBINERS = ("sum", "max", "min")
+_ONE_SHOT_REDUCERS = {"max": lax.pmax, "min": lax.pmin}
+
+
+def _check_combiner(combiner: str, op: str) -> None:
+    if combiner not in _COMBINERS:
+        raise ValueError(f"unknown combiner {combiner!r} for {op}; have {_COMBINERS}")
+
+
+def _chunked(flat: jax.Array, k: int, *, combiner: str | None = None):
     """Pad + reshape a flat buffer to (k, ceil(size/k)). ``k`` is honored
     even when it exceeds the element count (tiny buffers pad up), because
-    the schedule's chunk count is load-bearing for the executor."""
+    the schedule's chunk count is load-bearing for the executor.
+
+    ``combiner`` declares the reduce-family combine the schedule will apply
+    to this buffer (``None`` for overwrite-only ops like bcast/allgather).
+    Zero padding is the identity for SUM only; any other combiner must have
+    been routed off the schedule path before the buffer grows a pad tail —
+    this guard is what keeps a future combiner from silently corrupting the
+    last chunk."""
     k = max(1, k)
     chunk_elems = max(1, -(-flat.size // k))
     pad = k * chunk_elems - flat.size
     if pad:
+        if combiner is not None and combiner != "sum":
+            raise ValueError(
+                f"zero pad is only the identity for the 'sum' combiner, got "
+                f"{combiner!r} — route non-sum reduces through the XLA "
+                "one-shot collectives (pmax/pmin)"
+            )
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     return flat.reshape(k, chunk_elems), pad
 
@@ -95,7 +122,7 @@ def apply_plan(plan: CollectivePlan, x: jax.Array, axis_name, *, fused: bool = T
         out = execute_collective(sched, buf, axis_name)
         return out.reshape((plan.n,) + x.shape)
     if plan.op == "reduce_scatter":
-        buf, _pad = _chunked(jnp.ravel(x), plan.n)
+        buf, _pad = _chunked(jnp.ravel(x), plan.n, combiner="sum")
         out = execute_collective(sched, buf, axis_name)
         return lax.dynamic_slice(out, (lax.axis_index(axis_name), 0), (1, buf.shape[1]))[0]
     flat, _M = _flat(x)
@@ -117,10 +144,11 @@ def apply_plan(plan: CollectivePlan, x: jax.Array, axis_name, *, fused: bool = T
         and fused
         and sched.num_rounds > _MAX_UNROLLED_ROUNDS
     ):
-        buf, pad = _chunked(flat, plan.num_chunks)
+        buf, pad = _chunked(flat, plan.num_chunks, combiner="sum")
         out = fused_rsb_fused(buf, axis_name, root=plan.root)
         return _unchunked(out, pad, x.shape, x.dtype)
-    buf, pad = _chunked(flat, sched.num_chunks)
+    combiner = "sum" if plan.op in ("reduce", "allreduce") else None
+    buf, pad = _chunked(flat, sched.num_chunks, combiner=combiner)
     out = execute_collective(sched, buf, axis_name)
     return _unchunked(out, pad, x.shape, x.dtype)
 
@@ -144,6 +172,7 @@ def pbcast(
     """Broadcast ``x`` from ``root`` over the named mesh axis (must be called
     inside ``shard_map``; every rank passes a same-shape buffer and receives
     the root's)."""
+    x = jnp.asarray(x)
     n = lax.axis_size(axis_name)
     if n == 1:
         return x
@@ -168,12 +197,23 @@ def preduce(
     num_chunks: int | None = None,
     tuner: Tuner | None = None,
     inter_pod: bool = False,
+    combiner: str = "sum",
 ) -> jax.Array:
-    """Reduce-to-root (sum). Non-root ranks return garbage partial sums by
-    design (MPI_Reduce semantics) — only the root's output is meaningful."""
+    """Reduce-to-root (``combiner``: sum by default). Non-root ranks return
+    garbage partial sums by design (MPI_Reduce semantics) — only the root's
+    output is meaningful. Non-sum combiners route through the XLA one-shot
+    collectives (the schedule executors combine by sum, and zero pad tails
+    are only the identity for sum)."""
+    _check_combiner(combiner, "preduce")
+    x = jnp.asarray(x)  # n == 1 must return the communicating path's
+    # dtype/shape contract (a committed jnp array), not the caller's object
     n = lax.axis_size(axis_name)
     if n == 1:
         return x
+    if combiner != "sum":
+        if algo != "auto":
+            raise ValueError(f"combiner {combiner!r} supports algo='auto' only")
+        return _ONE_SHOT_REDUCERS[combiner](x, axis_name)
     _flat_x, M = _flat(x)
     plan = plan_collective(
         "reduce", M, n, root=root, algo=algo, num_chunks=num_chunks,
@@ -196,15 +236,26 @@ def pallreduce(
     tuner: Tuner | None = None,
     inter_pod: bool = False,
     fused: bool = True,
+    combiner: str = "sum",
 ) -> jax.Array:
-    """All-reduce (sum) over the named axis through the tuned plan layer.
+    """All-reduce (``combiner``: sum by default) over the named axis through
+    the tuned plan layer.
 
     ``algo``: 'auto', 'reduce_then_bcast', 'fused_rsb', 'ring_allreduce', or
-    the one-shot baseline 'xla_psum'.
+    the one-shot baseline 'xla_psum'. Non-sum combiners (max/min) route to
+    the XLA one-shots — the schedule executors combine by sum only.
     """
+    _check_combiner(combiner, "pallreduce")
+    x = jnp.asarray(x)
     n = lax.axis_size(axis_name)
     if n == 1:
         return x
+    if combiner != "sum":
+        if algo not in ("auto", "xla_psum"):
+            raise ValueError(
+                f"combiner {combiner!r} supports algo='auto' or 'xla_psum' only"
+            )
+        return _ONE_SHOT_REDUCERS[combiner](x, axis_name)
     if algo == "xla_psum":
         return lax.psum(x, axis_name)
     _flat_x, M = _flat(x)
@@ -229,6 +280,7 @@ def pallgather(
     ``algo``: 'auto', 'ring_allgather', 'doubling_allgather' (power-of-two
     n), or the one-shot baseline 'xla_allgather'.
     """
+    x = jnp.asarray(x)
     n = lax.axis_size(axis_name)
     if n == 1:
         return x[None]
@@ -248,14 +300,25 @@ def preduce_scatter(
     algo: str = "auto",
     tuner: Tuner | None = None,
     inter_pod: bool = False,
+    combiner: str = "sum",
 ) -> jax.Array:
-    """Reduce-scatter (sum): every rank contributes the full flat buffer and
-    receives its rank-indexed shard of the sum — a flat array of
-    ``ceil(x.size / n)`` elements (zero-padded tail on the last shard)."""
+    """Reduce-scatter (``combiner``: sum by default): every rank contributes
+    the full flat buffer and receives its rank-indexed shard of the combined
+    result — a flat array of ``ceil(x.size / n)`` elements (zero-padded tail
+    on the last shard). Non-sum combiners combine FIRST through the XLA
+    one-shot (pmax/pmin), then shard — the pad tail is appended after the
+    combine, so the identity-element question never arises."""
+    _check_combiner(combiner, "preduce_scatter")
     n = lax.axis_size(axis_name)
     flat = jnp.ravel(x)
     if n == 1:
         return flat
+    if combiner != "sum":
+        if algo != "auto":
+            raise ValueError(f"combiner {combiner!r} supports algo='auto' only")
+        full = _ONE_SHOT_REDUCERS[combiner](flat, axis_name)
+        buf, _pad = _chunked(full, n)
+        return lax.dynamic_slice(buf, (lax.axis_index(axis_name), 0), (1, buf.shape[1]))[0]
     M = flat.size * flat.dtype.itemsize
     plan = plan_collective(
         "reduce_scatter", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,

@@ -1,0 +1,352 @@
+"""Overlap engine: tuned *schedules of* collectives (DESIGN.md Sec. 8).
+
+The paper's end-to-end result (7% CNTK speedup at 128 GPUs, Sec. V-D) does
+not come from any single collective — it comes from *pipelining*: the
+chunked chain overlaps the stages of one broadcast, and the application win
+comes from hiding communication behind training compute. Awan et al.
+(1810.11112) show the same structure — bucketed collectives streamed
+against backprop — is what makes CUDA-Aware MPI competitive for TF
+training. This module is that layer for the ``repro.comm`` plan stack: it
+turns a :class:`~repro.core.bucketing.BucketSpec` plus per-bucket
+:class:`~repro.comm.plan.CollectivePlan`s into an *interleaved* execution.
+
+Three pieces:
+
+* :func:`plan_overlap` / :class:`OverlapPlan` — host-side planning: buckets
+  are dispatched in REVERSE tree-flatten order (backward-order streaming,
+  the DDP/Horovod pattern — gradients of late layers materialize first),
+  and the in-flight window (``overlap_depth``) is chosen by
+  :func:`repro.core.cost_model.t_overlapped` unless a tuner table carries a
+  tuned depth for the bucket (``Decision.overlap_depth``).
+* :func:`simulate_overlap` — a round-accurate discrete simulator that
+  prices the overlapped timeline against the barrier schedule
+  (``pallreduce_tree``'s all-compute-then-all-comm lowering) and accounts
+  network idle rounds and wire bytes.
+* :func:`execute_overlap` / :func:`overlap_allreduce_tree` — the traced
+  execution: per-bucket collectives are IDENTICAL to the barrier path
+  (same ``CollectivePlan``, same ``apply_plan`` lanes, bit-for-summation-
+  order equal results); only the dispatch order and the ``chunked_copy``
+  staging interleave differ, which is exactly what lets the XLA scheduler
+  overlap bucket k+1's staging DMA with bucket k's in-flight collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+from jax import lax
+
+from ..core import bucketing, cost_model
+from ..core.bucketing import BucketSpec
+from ..core.tuner import Tuner, default_tuner
+from . import api as comm_api
+from .plan import CollectivePlan, plan_collective
+
+__all__ = [
+    "OverlapPlan",
+    "plan_overlap",
+    "simulate_overlap",
+    "execute_overlap",
+    "overlap_allreduce_tree",
+]
+
+# analytic depth sweep ceiling: every extra slot is a live staged bucket
+# buffer in device memory, and t_overlapped flattens past a handful
+_MAX_DEPTH = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPlan:
+    """A fully-resolved schedule-of-collectives: bucket mix + per-(axis,
+    bucket) plans + dispatch order + in-flight window."""
+
+    op: str
+    spec: BucketSpec
+    axes: tuple[str, ...]                        # sync order (hierarchy levels)
+    plans: dict[str, tuple[CollectivePlan, ...]]  # per axis, one plan per bucket
+    order: tuple[int, ...]                       # bucket dispatch order
+    overlap_depth: int
+    compute_s: float                             # hidden-compute budget (s)
+    depth_source: str                            # 'manual' | 'empirical' | 'analytic'
+
+    @property
+    def num_buckets(self) -> int:
+        return self.spec.num_buckets
+
+    def bucket_comm_s(self) -> list[float]:
+        """Per-bucket predicted collective time, summed over hierarchy
+        levels, in DISPATCH order."""
+        return [
+            sum(self.plans[ax][k].predicted_s for ax in self.axes)
+            for k in self.order
+        ]
+
+    def bucket_stage_s(self, hw: cost_model.Hardware | None = None) -> list[float]:
+        """Per-bucket staging (pack / ``chunked_copy``) time in dispatch
+        order: one HBM read + one HBM write of the bucket."""
+        hw = hw or cost_model.TPU_V5E
+        sizes = self.spec.bucket_bytes()
+        return [2.0 * sizes[k] / hw.hbm_bw for k in self.order]
+
+    def wire_bytes(self) -> int:
+        """Total bytes on the wire — exactly the sum of the per-bucket plan
+        accounting (overlap reorders transfers, it never adds any)."""
+        return sum(p.wire_bytes() for ax in self.axes for p in self.plans[ax])
+
+    def barrier_s(self, hw: cost_model.Hardware | None = None) -> float:
+        return cost_model.t_bucketed_barrier(
+            self.bucket_comm_s(), self.compute_s, self.bucket_stage_s(hw)
+        )
+
+    def overlapped_s(self, hw: cost_model.Hardware | None = None) -> float:
+        return cost_model.t_overlapped(
+            self.bucket_comm_s(),
+            self.compute_s,
+            depth=self.overlap_depth,
+            stage_s=self.bucket_stage_s(hw),
+        )
+
+    def efficiency(self, hw: cost_model.Hardware | None = None) -> float:
+        """Fraction of the barrier schedule's span the overlap removes."""
+        barrier = self.barrier_s(hw)
+        if barrier <= 0.0:
+            return 0.0
+        return max(0.0, 1.0 - self.overlapped_s(hw) / barrier)
+
+
+def plan_overlap(
+    tree: Any,
+    axes: Sequence[tuple[str, int]],
+    *,
+    op: str = "allreduce",
+    root: int = 0,
+    algo: str = "auto",
+    tuner: Tuner | None = None,
+    bucket_bytes: int = 4 << 20,
+    inter_pod_axes: Sequence = (),
+    compute_s: float = 0.0,
+    overlap_depth: int | None = None,
+    reverse: bool = True,
+    spec: BucketSpec | None = None,
+) -> OverlapPlan:
+    """Resolve a schedule-of-collectives for ``tree`` over the mesh
+    ``axes`` (name, size) pairs, hierarchy levels in the given order.
+
+    Works on abstract leaves (``ShapeDtypeStruct``) — nothing is traced.
+    ``reverse=True`` dispatches buckets in reverse tree-flatten order
+    (gradient availability order during backprop); weight distribution
+    passes ``reverse=False`` (buckets stream in load order).
+
+    Depth resolution order: explicit ``overlap_depth`` > a tuned
+    ``overlap_depth`` in the tuner's per-op table (largest bucket's entry)
+    > the analytic :func:`cost_model.optimal_overlap_depth` sweep.
+    """
+    t = tuner or default_tuner()
+    spec = spec if spec is not None else bucketing.plan_buckets(tree, bucket_bytes)
+    inter = tuple(inter_pod_axes)
+    plans: dict[str, tuple[CollectivePlan, ...]] = {}
+    for ax, n in axes:
+        plans[ax] = tuple(
+            plan_collective(
+                op, max(M, 1), n, root=root, algo=algo, tuner=t,
+                inter_pod=(ax in inter),
+            )
+            for M in spec.bucket_bytes()
+        )
+    idx = range(spec.num_buckets)
+    order = tuple(reversed(idx)) if reverse else tuple(idx)
+
+    if overlap_depth is not None:
+        depth, source = max(1, int(overlap_depth)), "manual"
+    else:
+        depth, source = None, "analytic"
+        # consult the tuner table at the largest bucket (the depth that
+        # matters — small tail buckets drain inside any window)
+        sizes = spec.bucket_bytes()
+        if sizes:
+            k_big = max(range(len(sizes)), key=lambda k: sizes[k])
+            for ax, _n in axes:
+                d = plans[ax][k_big].decision.overlap_depth
+                if d is not None:
+                    depth, source = d, "empirical"
+                    break
+        if depth is None:
+            oplan0 = OverlapPlan(op, spec, tuple(a for a, _ in axes), plans,
+                                 order, 1, compute_s, "analytic")
+            depth = cost_model.optimal_overlap_depth(
+                oplan0.bucket_comm_s(), compute_s,
+                stage_s=oplan0.bucket_stage_s(), max_depth=_MAX_DEPTH,
+            )
+    return OverlapPlan(
+        op, spec, tuple(a for a, _ in axes), plans, order, depth, compute_s, source
+    )
+
+
+# ---------------------------------------------------------------------------
+# round-accurate overlap simulator
+# ---------------------------------------------------------------------------
+
+
+def simulate_overlap(
+    oplan: OverlapPlan, hw: cost_model.Hardware | None = None
+) -> dict:
+    """Discrete-round replay of the overlapped timeline vs the barrier one.
+
+    Time is discretized into network rounds: bucket b costs its schedules'
+    round counts (summed over hierarchy levels; one-shot baselines count 1)
+    plus its staging rounds (``bucket_stage_s`` over the mean round
+    duration — this is what makes ``overlap_depth`` bind: staging of bucket
+    k needs a free slot in the window, exactly as in
+    :func:`cost_model.t_overlapped`). The backward pass produces one bucket
+    (in dispatch order) every ``compute_rounds_per_bucket`` rounds —
+    derived from ``compute_s`` and the mean round duration, floored at 1
+    (even free compute produces buckets sequentially, never all at once).
+
+    Returns idle-round and span accounting for both schedules. The
+    guaranteed invariant (tested): for >= 2 non-empty buckets the overlapped
+    schedule has STRICTLY fewer network-idle rounds than the barrier one —
+    the network starts on bucket 0 while later buckets are still computing.
+    """
+    hw = hw or cost_model.TPU_V5E
+    rounds = []
+    times = []
+    for k in oplan.order:
+        r = 0
+        t = 0.0
+        for ax in oplan.axes:
+            p = oplan.plans[ax][k]
+            r += p.schedule.num_rounds if p.schedule is not None else (
+                0 if p.algo == "noop" else 1
+            )
+            t += p.timed_rounds_s(hw) if p.schedule is not None else 0.0
+        rounds.append(max(r, 1))
+        times.append(t)
+    K = len(rounds)
+    total_comm_rounds = sum(rounds)
+    mean_round_s = (sum(times) / total_comm_rounds) if total_comm_rounds else hw.ts
+    mean_round_s = max(mean_round_s, hw.ts)
+    stage_rounds = [
+        int(round(s / mean_round_s)) for s in oplan.bucket_stage_s(hw)
+    ]
+    total_stage_rounds = sum(stage_rounds)
+    per_bucket_compute = max(
+        1, int(round(oplan.compute_s / max(K, 1) / mean_round_s))
+    ) if K else 0
+
+    # barrier: all compute, then all staging, then every transfer
+    barrier_span = K * per_bucket_compute + total_stage_rounds + total_comm_rounds
+    barrier_idle = K * per_bucket_compute + total_stage_rounds
+
+    # overlapped: the SAME greedy window recurrence the analytic depth
+    # tuner prices (cost_model.window_finish_times), in integer rounds —
+    # staging bucket k needs a free slot in the depth-deep window
+    depth = max(1, min(oplan.overlap_depth, max(K, 1)))
+    comm_end = cost_model.window_finish_times(
+        [(k + 1) * per_bucket_compute for k in range(K)],
+        stage_rounds,
+        rounds,
+        depth,
+    )
+    overlap_span = comm_end[-1] if K else 0
+    overlap_idle = overlap_span - total_comm_rounds
+
+    return {
+        "num_buckets": K,
+        "overlap_depth": depth,
+        "comm_rounds": total_comm_rounds,
+        "compute_rounds": K * per_bucket_compute,
+        "barrier_span_rounds": barrier_span,
+        "overlap_span_rounds": overlap_span,
+        "idle_rounds_barrier": barrier_idle,
+        "idle_rounds_overlap": overlap_idle,
+        "barrier_s": oplan.barrier_s(hw),
+        "overlapped_s": oplan.overlapped_s(hw),
+        "efficiency": oplan.efficiency(hw),
+        "wire_bytes": oplan.wire_bytes(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# traced execution (inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def execute_overlap(
+    oplan: OverlapPlan,
+    tree: Any,
+    *,
+    stage: bool = False,
+    stage_chunk: int = 64 * 1024,
+    fused: bool = True,
+) -> Any:
+    """Replay an :class:`OverlapPlan` on concrete values inside
+    ``shard_map``: buckets issue in dispatch order, and the next
+    ``overlap_depth - 1`` buckets are staged (``chunked_copy`` when
+    ``stage=True``) *before* the current bucket's collectives — the
+    double-buffer interleave that lets the scheduler run staging DMA
+    concurrently with the in-flight collective.
+
+    Per-bucket math is identical to the barrier ``*_tree`` path (same
+    plans, same executors), so results match it to float summation order.
+    """
+    buckets = bucketing.pack_buckets(tree, oplan.spec)
+    order = [k for k in oplan.order if buckets[k].size]
+    out: list = list(buckets)  # empty buckets pass through untouched
+
+    staged: dict[int, Any] = {}
+
+    def _stage(k: int) -> None:
+        b = buckets[k]
+        if stage:
+            from ..kernels.chunked_copy import chunked_copy
+
+            b = chunked_copy(b, chunk_elems=stage_chunk)
+        staged[k] = b
+
+    depth = max(1, oplan.overlap_depth)
+    for i, k in enumerate(order):
+        for j in order[i : i + depth]:   # keep the window staged ahead
+            if j not in staged:
+                _stage(j)
+        b = staged.pop(k)
+        for ax in oplan.axes:
+            b = comm_api.apply_plan(oplan.plans[ax][k], b, ax, fused=fused)
+        out[k] = b
+    return bucketing.unpack_buckets(out, oplan.spec)
+
+
+def overlap_allreduce_tree(
+    tree: Any,
+    axes: Sequence,
+    *,
+    algo: str = "auto",
+    tuner: Tuner | None = None,
+    bucket_bytes: int = 4 << 20,
+    inter_pod_axes: Sequence = (),
+    overlap_depth: int | None = None,
+    compute_s: float = 0.0,
+    stage: bool = False,
+    stage_chunk: int = 64 * 1024,
+) -> Any:
+    """Bucket-streamed hierarchical all-reduce: the overlap-engine analogue
+    of :func:`repro.comm.api.pallreduce_tree` (same bucketing, same
+    hierarchy levels, same per-bucket plans — results equal to summation
+    order), with buckets dispatched in backward-streaming order inside the
+    tuned in-flight window. Must be called inside ``shard_map`` with every
+    axis in ``axes`` bound."""
+    spec = bucketing.plan_buckets(tree, bucket_bytes)
+    sized_axes = [(ax, lax.axis_size(ax)) for ax in axes]
+    oplan = plan_overlap(
+        tree,
+        sized_axes,
+        op="allreduce",
+        algo=algo,
+        tuner=tuner,
+        bucket_bytes=bucket_bytes,
+        inter_pod_axes=inter_pod_axes,
+        compute_s=compute_s,
+        overlap_depth=overlap_depth,
+        reverse=True,
+        spec=spec,
+    )
+    return execute_overlap(oplan, tree, stage=stage, stage_chunk=stage_chunk)

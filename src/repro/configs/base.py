@@ -227,19 +227,31 @@ class RunConfig:
     optimizer: str = "adamw"
     # data-parallel sync mode: 'grad_allreduce' (modern baseline, GSPMD
     # inserts the collective), 'param_bcast' (the paper's CA-CNTK pattern:
-    # reduce-to-root + tuned bcast through core.bcast), or
-    # 'tuned_allreduce' (the repro.comm plan layer: bucketed, hierarchical,
-    # per-op tuned allreduce — reduce_then_bcast/fused_rsb/ring windows)
+    # reduce-to-root + tuned bcast through core.bcast), 'tuned_allreduce'
+    # (the repro.comm plan layer: bucketed, hierarchical, per-op tuned
+    # allreduce — reduce_then_bcast/fused_rsb/ring windows), or
+    # 'overlap_allreduce' (same plans, bucket-streamed through the overlap
+    # engine: backward-order dispatch inside a tuned in-flight window —
+    # identical params up to float summation order)
     sync_mode: str = "grad_allreduce"
     bcast_algo: str = "auto"
-    # allreduce algorithm for sync_mode='tuned_allreduce': 'auto' consults
-    # the per-op tuner; or pin 'reduce_then_bcast' | 'fused_rsb' |
-    # 'ring_allreduce' | 'xla_psum'
+    # allreduce algorithm for sync_mode='tuned_allreduce'/'overlap_allreduce':
+    # 'auto' consults the per-op tuner; or pin 'reduce_then_bcast' |
+    # 'fused_rsb' | 'ring_allreduce' | 'xla_psum'
     allreduce_algo: str = "auto"
-    # path to a calibrated empirical table (Tuner.save format, e.g.
-    # experiments/allreduce_table.json from benchmarks/bench_allreduce.py);
-    # None = analytic decisions. Applies to both explicit sync modes.
+    # path to a calibrated empirical table (Tuner.save format; a REAL-device
+    # run of benchmarks/bench_allreduce.py writes a loadable
+    # experiments/allreduce_table.json). None = analytic decisions. Applies
+    # to all explicit sync modes. NOTE: the committed copy of that artifact
+    # is regenerated by CI in --dryrun mode and branded as such — Tuner.load
+    # refuses dryrun tables, so point this at a table from a device run.
     tuner_table: Optional[str] = None
+    # in-flight bucket window for sync_mode='overlap_allreduce': None tunes
+    # it (tuner table overlap_depth, else cost_model.optimal_overlap_depth)
+    overlap_depth: Optional[int] = None
+    # backward-pass seconds the overlap engine may hide collectives behind
+    # (0.0 = depth tuning assumes staging-bound, still streams buckets)
+    overlap_compute_s: float = 0.0
     bcast_bucket_bytes: int = 4 << 20
     num_microbatches: int = 1
     remat: bool = True

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Sequence
 
 __all__ = [
     "Hardware",
@@ -23,6 +24,10 @@ __all__ = [
     "cost",
     "optimal_chunk_bytes",
     "optimal_chunk_bytes_fused",
+    "t_overlapped",
+    "t_bucketed_barrier",
+    "optimal_overlap_depth",
+    "window_finish_times",
     "ALGO_COSTS",
 ]
 
@@ -225,6 +230,105 @@ def t_ring_reduce_scatter(M: float, n: int, hw: Hardware, B: float) -> float:
     if n <= 1:
         return 0.0
     return (n - 1) * (hw.ts + math.ceil(M / n) / B)
+
+
+# ---------------------------------------------------------------------------
+# Compute/communication overlap (the CNTK end-to-end regime, paper Sec. V-D):
+# bucketed gradient sync pipelined against backward compute. These price
+# *schedules of* collectives — the overlap engine (repro.comm.overlap) feeds
+# them per-bucket times from CollectivePlans.
+# ---------------------------------------------------------------------------
+
+
+def t_bucketed_barrier(
+    bucket_comm_s: Sequence[float],
+    compute_s: float,
+    stage_s: Sequence[float] | None = None,
+) -> float:
+    """Barrier schedule: ALL compute, then ALL staging, then every bucket's
+    collective back-to-back (what ``pallreduce_tree`` lowers today). The
+    network idles for the whole compute phase."""
+    stage = sum(stage_s) if stage_s is not None else 0.0
+    return float(compute_s) + stage + float(sum(bucket_comm_s))
+
+
+def window_finish_times(
+    avail: Sequence,
+    stage: Sequence,
+    comm: Sequence,
+    depth: int,
+) -> list:
+    """THE greedy in-flight-window recurrence — the single definition both
+    :func:`t_overlapped` (seconds) and the round simulator
+    (``repro.comm.overlap.simulate_overlap``, integer rounds) drain through,
+    so the analytic depth tuner and the round accounting can never drift
+    apart. Per bucket k (dispatch order):
+
+        stage_k starts at max(avail_k, comm_end_{k-depth})   (free slot)
+        comm_k  starts at max(stage-end_k, comm_end_{k-1})   (serial net)
+
+    Works on any numeric type (floats or integer rounds). Returns the
+    per-bucket comm finish times.
+    """
+    K = len(comm)
+    depth = max(1, min(int(depth), max(K, 1)))
+    comm_end = [0] * K
+    net_free = 0
+    for k in range(K):
+        slot_free = comm_end[k - depth] if k >= depth else 0
+        ready = max(avail[k], slot_free) + stage[k]
+        start = max(ready, net_free)
+        net_free = comm_end[k] = start + comm[k]
+    return comm_end
+
+
+def t_overlapped(
+    bucket_comm_s: Sequence[float],
+    compute_s: float,
+    *,
+    depth: int = 2,
+    stage_s: Sequence[float] | None = None,
+) -> float:
+    """Overlapped (bucket-streamed) schedule: greedy timeline estimate.
+
+    Buckets are listed in DISPATCH order (backward-order streaming — the
+    DDP/Horovod pattern). Bucket k's gradient becomes available a fraction
+    (k+1)/K through the backward pass; staging (pack / ``chunked_copy``)
+    needs a free slot in the ``depth``-deep in-flight window (the double/
+    multi-buffer the consumer allocates), and the serialized network drains
+    staged buckets in dispatch order (:func:`window_finish_times`).
+
+    ``depth`` only buys time when staging is non-free: depth 1 serializes
+    stage and comm, depth 2 is classic double buffering, deeper windows hide
+    staging bursts at the cost of one live bucket buffer each. Returns the
+    finish time of the last bucket's collective.
+    """
+    K = len(bucket_comm_s)
+    if K == 0:
+        return float(compute_s)
+    avail = [compute_s * (k + 1) / K for k in range(K)]
+    stage = list(stage_s) if stage_s is not None else [0.0] * K
+    return float(window_finish_times(avail, stage, bucket_comm_s, depth)[-1])
+
+
+def optimal_overlap_depth(
+    bucket_comm_s: Sequence[float],
+    compute_s: float,
+    *,
+    stage_s: Sequence[float] | None = None,
+    max_depth: int = 8,
+) -> int:
+    """Smallest in-flight window minimizing :func:`t_overlapped` (ties go to
+    the shallower window — each extra depth is a live staged bucket buffer)."""
+    K = len(bucket_comm_s)
+    if K <= 1:
+        return 1
+    best_d, best_t = 1, float("inf")
+    for d in range(1, min(max_depth, K) + 1):
+        t = t_overlapped(bucket_comm_s, compute_s, depth=d, stage_s=stage_s)
+        if t < best_t * (1.0 - 1e-12):
+            best_d, best_t = d, t
+    return best_d
 
 
 def t_nccl_ring(M: float, n: int, hw: Hardware, B: float, slice_bytes: float = 256 << 10) -> float:

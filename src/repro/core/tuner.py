@@ -35,13 +35,20 @@ def _is_pow2(n: int) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class Decision:
-    """A tuning decision for one (op, M, n) point."""
+    """A tuning decision for one (op, M, n) point.
+
+    ``overlap_depth`` is the tuned in-flight bucket window for bucket-
+    streamed execution (``repro.comm.overlap``); ``None`` means the table
+    carries no depth for this point and the overlap planner should fall
+    back to the analytic :func:`cost_model.optimal_overlap_depth` sweep.
+    """
 
     algo: str
     num_chunks: int
     chunk_bytes: int
     predicted_s: float
     source: str  # 'analytic' | 'empirical'
+    overlap_depth: int | None = None
 
 
 # algorithms the executor can run, with practical applicability predicates
@@ -173,15 +180,43 @@ class Tuner:
         base = f"{n}:{self._bucket(M)}:{int(inter_pod)}"
         return base if op == "bcast" else f"{op}:{base}"
 
-    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast") -> None:
+    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast", overlap_depth: int | None = None) -> None:
         key = self._key(M, n, inter_pod, op)
         prev = self.table.get(key)
-        if prev is None or measured_s < prev["measured_s"]:
-            self.table[key] = {
+        # depth-only entries (record_overlap before any measurement) carry no
+        # measured_s and never block a real measurement from landing
+        if prev is None or "measured_s" not in prev or measured_s < prev["measured_s"]:
+            entry = {
                 "algo": algo,
                 "num_chunks": num_chunks,
                 "measured_s": measured_s,
             }
+            if (
+                overlap_depth is None
+                and prev is not None
+                and "overlap_depth" in prev
+                and prev.get("algo") == algo
+            ):
+                # keep a tuned depth alive — but ONLY across entries for the
+                # same algorithm; a depth tuned against another algorithm's
+                # round/staging profile must not float onto this one. A
+                # depth-only entry (no algo key) also drops: it was tuned
+                # against whatever 'auto' picked, which this measurement may
+                # have just displaced.
+                overlap_depth = prev["overlap_depth"]
+            if overlap_depth is not None:
+                entry["overlap_depth"] = int(overlap_depth)
+            self.table[key] = entry
+
+    def record_overlap(self, M: int, n: int, depth: int, *, inter_pod: bool = False, op: str = "allreduce") -> None:
+        """Attach a tuned in-flight bucket window to the (op, M, n) table
+        entry alongside ``num_chunks``. With no measured entry at that point
+        yet, a DEPTH-ONLY entry is stored — it never masquerades as an
+        empirical algorithm decision (``select`` still prices analytically
+        and only annotates the Decision with the depth)."""
+        key = self._key(M, n, inter_pod, op)
+        entry = self.table.setdefault(key, {})
+        entry["overlap_depth"] = max(1, int(depth))
 
     def calibrate(
         self,
@@ -231,42 +266,74 @@ class Tuner:
         if n <= 1:
             return Decision("noop", 1, max(M, 1), 0.0, "analytic")
         hit = self.table.get(self._key(M, n, inter_pod, op))
-        if hit is not None:
+        depth = hit.get("overlap_depth") if hit is not None else None
+        depth = max(1, int(depth)) if depth is not None else None
+        if hit is not None and "algo" in hit:
+            # Empirical entries are data, not code: a table recorded with a
+            # larger max_chunks (or a corrupted num_chunks < 1) must not flow
+            # into a Decision the executors can't honor — clamp at hit time,
+            # exactly as Tuner.load clamps at read time.
+            k = min(max(int(hit["num_chunks"]), 1), self.max_chunks)
             return Decision(
                 hit["algo"],
-                int(hit["num_chunks"]),
-                math.ceil(M / max(1, int(hit["num_chunks"]))),
+                k,
+                math.ceil(M / k),
                 float(hit["measured_s"]),
                 "empirical",
+                overlap_depth=depth,
             )
-        if op == "bcast":
-            return self._analytic(M, n, inter_pod)
-        return self._analytic_op(op, M, n, inter_pod)
+        # depth-only entries (record_overlap with no measurement yet) keep
+        # the analytic pricing and only annotate the decision with the depth
+        dec = self._analytic(M, n, inter_pod) if op == "bcast" else self._analytic_op(op, M, n, inter_pod)
+        return dataclasses.replace(dec, overlap_depth=depth) if depth is not None else dec
 
     # -- persistence ---------------------------------------------------------
 
-    def save(self, path: str) -> None:
+    def save(self, path: str, *, dryrun: bool = False) -> None:
+        """Persist the table. ``dryrun=True`` brands the artifact as
+        simulator-derived: :meth:`load` refuses to seed empirical decisions
+        from such a table (stand-ins must never read as measurements)."""
         payload = {
             "hw": self.hw.name,
             "max_chunks": self.max_chunks,
             "knomial_k": self.knomial_k,
             "table": self.table,
         }
+        if dryrun:
+            payload["dryrun"] = True
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with open(path, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)
 
     @classmethod
-    def load(cls, path: str, hw: Hardware = TPU_V5E) -> "Tuner":
+    def load(cls, path: str, hw: Hardware = TPU_V5E, *, allow_dryrun: bool = False) -> "Tuner":
+        """Load a saved table. Tables branded ``dryrun`` (simulator clocks,
+        not device measurements) raise unless ``allow_dryrun=True`` — and
+        even then their MEASURED entries are DROPPED after schema
+        validation, so a dry-run artifact can be format-checked but a
+        simulator clock can never masquerade as empirical tuning data.
+        Depth-only entries (``record_overlap``) survive the drop: an
+        overlap window is a schedule-structure choice from the analytic
+        sweep, not a timing measurement, so ``plan_overlap`` may consume it
+        from a dryrun artifact (``experiments/overlap_depths.json``)."""
         with open(path) as f:
             payload = json.load(f)
         table = payload.get("table", {})
+        max_chunks = payload.get("max_chunks", 64)
         # schema gate: a rotten empirical table must fail here, not at trace
         # time deep inside a train step (see repro.comm.tables for the
         # experiments/ artifact loaders with the same policy)
         known = set(cost_model.ALGO_COSTS) | {"noop", "xla_psum", "xla_allgather"}
         for key, entry in table.items():
-            if not isinstance(entry, dict) or not {"algo", "num_chunks", "measured_s"} <= set(entry):
+            if not isinstance(entry, dict):
+                raise ValueError(f"{path}: entry {key!r} must be an object, got {entry!r}")
+            if "overlap_depth" in entry and (
+                not isinstance(entry["overlap_depth"], int) or entry["overlap_depth"] < 1
+            ):
+                raise ValueError(f"{path}: entry {key!r} overlap_depth must be a positive int")
+            if set(entry) == {"overlap_depth"}:
+                continue  # depth-only entry (record_overlap, no measurement)
+            if not {"algo", "num_chunks", "measured_s"} <= set(entry):
                 raise ValueError(
                     f"{path}: entry {key!r} must have algo/num_chunks/measured_s, got {entry!r}"
                 )
@@ -278,9 +345,23 @@ class Tuner:
                 entry["measured_s"]
             ):
                 raise ValueError(f"{path}: entry {key!r} measured_s must be finite")
+            # clamp num_chunks to the table's own max_chunks at read time —
+            # the executors honor at most that many chunks (see select())
+            entry["num_chunks"] = min(entry["num_chunks"], max_chunks)
+        if payload.get("dryrun"):
+            if not allow_dryrun:
+                raise ValueError(
+                    f"{path}: table is branded dryrun (simulator stand-ins, not device "
+                    "measurements) and cannot seed empirical tuner decisions; pass "
+                    "allow_dryrun=True to schema-check it (measured entries are "
+                    "dropped, depth-only entries kept)"
+                )
+            table = {
+                k: e for k, e in table.items() if set(e) == {"overlap_depth"}
+            }
         return cls(
             hw,
-            max_chunks=payload.get("max_chunks", 64),
+            max_chunks=max_chunks,
             knomial_k=payload.get("knomial_k", 4),
             table=table,
         )

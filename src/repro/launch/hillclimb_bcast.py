@@ -12,9 +12,12 @@ small-message wins come from). 'xla_psum' is the one-shot NCCL-style
 baseline; 'pipelined_chain' is the paper's contribution; 'bidir_chain' is
 our beyond-paper variant; 'ar:<algo>' entries lower the
 sync_mode='tuned_allreduce' step through the repro.comm plan layer
-(ar:auto / ar:fused_rsb / ar:ring_allreduce / ...). Each row also carries
-the PLANNED footprint (CollectivePlan wire-bytes and predicted time for the
-same bucket mix) next to the measured-from-HLO numbers.
+(ar:auto / ar:fused_rsb / ar:ring_allreduce / ...); 'ov:<algo>' entries
+lower the overlap-engine sync_mode='overlap_allreduce' step (same plans,
+bucket-streamed schedule). Each row also carries the PLANNED footprint
+(CollectivePlan wire-bytes and predicted time for the same bucket mix,
+plus the overlap engine's barrier-vs-streamed span and idle-round
+accounting for ar:/ov: rows) next to the measured-from-HLO numbers.
 
     PYTHONPATH=src python -m repro.launch.hillclimb_bcast [--ranks 64]
 """
@@ -33,13 +36,20 @@ from repro.core.cost_model import TPU_V5E
 from repro.models import Model
 from repro.optim.optimizers import get_optimizer
 from repro.optim.schedules import warmup_cosine
-from repro.train.train_step import make_bcast_train_step, make_tuned_allreduce_train_step
+from repro.train.train_step import (
+    make_bcast_train_step,
+    make_overlap_allreduce_train_step,
+    make_tuned_allreduce_train_step,
+)
 
 
-def planned_footprint(model, *, ranks: int, bucket_bytes: int, op: str, algo: str):
+def planned_footprint(model, *, ranks: int, bucket_bytes: int, op: str, algo: str,
+                      overlap: bool = False, overlap_depth: int | None = None):
     """Host-side CollectivePlan accounting for the gradient bucket mix —
     what the comm layer PLANS to put on the wire, next to what the lowered
-    HLO actually contains."""
+    HLO actually contains. With ``overlap=True`` the row also carries the
+    overlap engine's planned-vs-simulated schedule accounting (barrier vs
+    bucket-streamed span, idle rounds, tuned depth)."""
     grads_like = model.param_shapes()
     spec = bucketing.plan_buckets(grads_like, bucket_bytes)
     plans = [
@@ -47,12 +57,28 @@ def planned_footprint(model, *, ranks: int, bucket_bytes: int, op: str, algo: st
         for M in spec.bucket_bytes()
         if M
     ]
-    return {
+    out = {
         "planned_algos": sorted({p.algo for p in plans}),
         "planned_wire_bytes": sum(p.wire_bytes() for p in plans),
         "planned_time_ms": sum(p.predicted_s for p in plans) * 1e3,
         "num_buckets": len(plans),
     }
+    if overlap:
+        oplan = comm.plan_overlap(
+            grads_like, [("data", ranks)], op=op, algo=algo,
+            bucket_bytes=bucket_bytes, overlap_depth=overlap_depth,
+        )
+        sim = comm.simulate_overlap(oplan)
+        out.update(
+            overlap_depth=oplan.overlap_depth,
+            overlap_depth_source=oplan.depth_source,
+            planned_barrier_ms=oplan.barrier_s() * 1e3,
+            planned_overlap_ms=oplan.overlapped_s() * 1e3,
+            overlap_efficiency=oplan.efficiency(),
+            sim_idle_rounds_barrier=sim["idle_rounds_barrier"],
+            sim_idle_rounds_overlap=sim["idle_rounds_overlap"],
+        )
+    return out
 
 
 def lower_algo(algo: str, *, ranks: int, seq: int, batch: int, bucket_mb: int):
@@ -61,18 +87,24 @@ def lower_algo(algo: str, *, ranks: int, seq: int, batch: int, bucket_mb: int):
     model = Model(cfg)
     opt = get_optimizer("adamw")
     lr_fn = warmup_cosine(3e-4, 100, 1000)
-    if algo.startswith("ar:"):
+    if algo.startswith("ar:") or algo.startswith("ov:"):
+        # ar:<algo> lowers the barrier tuned_allreduce step; ov:<algo> the
+        # overlap-engine (bucket-streamed) step — same plans, different
+        # schedule-of-collectives, so the planned overlap accounting sits
+        # next to the lowered-HLO footprint of each
+        overlap = algo.startswith("ov:")
         run = RunConfig(
-            sync_mode="tuned_allreduce",
+            sync_mode="overlap_allreduce" if overlap else "tuned_allreduce",
             allreduce_algo=algo[3:],
             bcast_bucket_bytes=bucket_mb << 20,
             num_microbatches=1,
             remat=True,
         )
-        step = make_tuned_allreduce_train_step(model, run, opt, lr_fn, mesh)
+        make = make_overlap_allreduce_train_step if overlap else make_tuned_allreduce_train_step
+        step = make(model, run, opt, lr_fn, mesh)
         planned = planned_footprint(
             model, ranks=ranks, bucket_bytes=bucket_mb << 20,
-            op="allreduce", algo=algo[3:],
+            op="allreduce", algo=algo[3:], overlap=True,
         )
     else:
         run = RunConfig(
@@ -139,7 +171,7 @@ def main():
     ap.add_argument(
         "--algos",
         default="xla_psum,binomial,pipelined_chain,bidir_chain,scatter_allgather,auto,"
-                "ar:auto,ar:fused_rsb,ar:ring_allreduce,ar:reduce_then_bcast",
+                "ar:auto,ar:fused_rsb,ar:ring_allreduce,ar:reduce_then_bcast,ov:auto",
     )
     ap.add_argument("--out", default="experiments/hillclimb_bcast.json")
     args = ap.parse_args()

@@ -44,7 +44,7 @@ class Engine:
     prefill-built KV caches are placed per ``cache_specs``."""
 
     def __init__(self, cfg: ModelConfig, params, *, mesh=None, max_len: int = 0,
-                 distribute: bool = False):
+                 distribute: bool = False, double_buffer: bool = False):
         self.cfg = cfg
         self.model = Model(cfg)
         self.mesh = mesh
@@ -55,7 +55,9 @@ class Engine:
                 self.model.param_shapes(), mesh, fsdp=False, attn_fallback="head_dim"
             )
             if distribute:
-                params = distribute_weights(params, mesh, specs=pspecs)
+                params = distribute_weights(
+                    params, mesh, specs=pspecs, double_buffer=double_buffer
+                )
             else:
                 params = jax.device_put(params, _placements(mesh, pspecs))
         self.params = params
@@ -136,7 +138,9 @@ def plan_distribution(params, mesh, *, algo: str = "auto", tuner=None,
 
 
 def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=None,
-                       bucket_bytes: int = 4 << 20, return_plans: bool = False):
+                       bucket_bytes: int = 4 << 20, return_plans: bool = False,
+                       double_buffer: bool = False, overlap_depth: int = 2,
+                       stage_chunk: int = 64 * 1024):
     """Broadcast freshly-loaded weights across the data axes with the tuned
     library (the paper's 'training parameters exchange' applied at load).
 
@@ -147,21 +151,45 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
     axis exists. When ``specs`` (a ``param_specs`` tree) is given, the
     replicated result is then laid out per those specs, so the weights land
     exactly where the serving/training layout declares. ``return_plans=True``
-    additionally returns the executed plan table."""
+    additionally returns the executed plan table.
+
+    ``double_buffer=True`` routes execution through the overlap engine
+    (``comm.execute_overlap``): bucket k+1 is staged through the
+    ``chunked_copy`` Pallas pipeline (Sec. IV-C) while bucket k's broadcast
+    is in flight — ``overlap_depth`` staging buffers deep, buckets in load
+    order. Per-bucket collectives are the SAME plans either way, so the
+    distributed weights are identical."""
     from ..core import bucketing
 
     bucket_spec, plans = plan_distribution(
         params, mesh, algo=algo, tuner=tuner, bucket_bytes=bucket_bytes
     )
 
-    def run(p):
-        buckets = bucketing.pack_buckets(p, bucket_spec)
-        for ax, ax_plans in plans.items():
-            buckets = [
-                comm.apply_plan(plan, b, ax) if b.size else b
-                for plan, b in zip(ax_plans, buckets)
-            ]
-        return bucketing.unpack_buckets(buckets, bucket_spec)
+    if double_buffer:
+        oplan = comm.OverlapPlan(
+            op="bcast",
+            spec=bucket_spec,
+            axes=tuple(plans),
+            plans={ax: tuple(ax_plans) for ax, ax_plans in plans.items()},
+            order=tuple(range(bucket_spec.num_buckets)),
+            overlap_depth=max(1, int(overlap_depth)),
+            compute_s=0.0,
+            depth_source="manual",
+        )
+
+        def run(p):
+            return comm.execute_overlap(oplan, p, stage=True, stage_chunk=stage_chunk)
+
+    else:
+
+        def run(p):
+            buckets = bucketing.pack_buckets(p, bucket_spec)
+            for ax, ax_plans in plans.items():
+                buckets = [
+                    comm.apply_plan(plan, b, ax) if b.size else b
+                    for plan, b in zip(ax_plans, buckets)
+                ]
+            return bucketing.unpack_buckets(buckets, bucket_spec)
 
     f = jax.shard_map(
         run,

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..comm import hierarchical_allreduce_axes, pallreduce_tree
+from ..comm import hierarchical_allreduce_axes, overlap_allreduce_tree, pallreduce_tree
 from ..configs.base import RunConfig
 from ..core.algorithms import ring_allreduce
 from ..core.bcast import pbcast_tree, preduce_sum
@@ -40,7 +40,12 @@ from ..core.tuner import Tuner
 from ..launch.mesh import dp_axes
 from ..optim.optimizers import Optimizer, clip_by_global_norm
 
-__all__ = ["make_train_step", "make_bcast_train_step", "make_tuned_allreduce_train_step"]
+__all__ = [
+    "make_train_step",
+    "make_bcast_train_step",
+    "make_tuned_allreduce_train_step",
+    "make_overlap_allreduce_train_step",
+]
 
 
 def _microbatch(batch, k: int):
@@ -205,10 +210,65 @@ def make_tuned_allreduce_train_step(
     (model axis size 1), and produces the same update as ``grad_allreduce``
     up to float summation order.
     """
+    def sync(grads, axes, inter_pod_axes):
+        return pallreduce_tree(
+            grads,
+            axes,
+            algo=run_cfg.allreduce_algo,
+            tuner=tuner,
+            bucket_bytes=run_cfg.bcast_bucket_bytes,
+            inter_pod_axes=inter_pod_axes,
+        )
+
+    return _make_comm_sync_step(
+        model, run_cfg, mesh, sync, optimizer, lr_fn, mode="tuned_allreduce"
+    )
+
+
+def make_overlap_allreduce_train_step(
+    model,
+    run_cfg: RunConfig,
+    optimizer: Optimizer,
+    lr_fn: Callable,
+    mesh,
+    *,
+    tuner: Tuner | None = None,
+):
+    """Gradient sync through the overlap engine (``repro.comm.overlap``).
+
+    Same bucketing, hierarchy levels, and per-bucket ``CollectivePlan``s as
+    ``tuned_allreduce`` — so parameters match it (and the GSPMD psum
+    baseline) up to float summation order — but buckets stream in
+    backward-dispatch order inside the tuned in-flight window
+    (``run_cfg.overlap_depth``; ``None`` = tuned), letting the scheduler
+    hide collectives behind the rest of the step (the CNTK end-to-end
+    pattern, paper Sec. V-D; Awan et al. 1810.11112).
+    """
+
+    def sync(grads, axes, inter_pod_axes):
+        return overlap_allreduce_tree(
+            grads,
+            axes,
+            algo=run_cfg.allreduce_algo,
+            tuner=tuner,
+            bucket_bytes=run_cfg.bcast_bucket_bytes,
+            inter_pod_axes=inter_pod_axes,
+            overlap_depth=run_cfg.overlap_depth,
+            compute_s=run_cfg.overlap_compute_s,
+        )
+
+    return _make_comm_sync_step(
+        model, run_cfg, mesh, sync, optimizer, lr_fn, mode="overlap_allreduce"
+    )
+
+
+def _make_comm_sync_step(model, run_cfg, mesh, sync, optimizer, lr_fn, *, mode):
+    """Shared body of the repro.comm gradient-sync modes: pure-DP shard_map
+    step whose gradient all-reduce is ``sync(grads, axes, inter_pod_axes)``."""
     from ..dist import topology
 
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    assert axis_sizes.get("model", 1) == 1, "tuned_allreduce mode is pure-DP"
+    assert axis_sizes.get("model", 1) == 1, f"{mode} mode is pure-DP"
     dp = dp_axes(mesh)
     assert len(dp) >= 1
     compute = _grad_fn(model, run_cfg)
@@ -220,14 +280,7 @@ def make_tuned_allreduce_train_step(
 
     def local_step(params, opt_state, batch):
         loss, metrics, grads = compute(params, batch)
-        grads = pallreduce_tree(
-            grads,
-            axes,
-            algo=run_cfg.allreduce_algo,
-            tuner=tuner,
-            bucket_bytes=run_cfg.bcast_bucket_bytes,
-            inter_pod_axes=inter_pod_axes,
-        )
+        grads = sync(grads, axes, inter_pod_axes)
         grads = jax.tree.map(lambda g: g / n_dp, grads)
         grads, gnorm = clip_by_global_norm(grads, 1.0)
         lr = lr_fn(opt_state["step"])

@@ -20,6 +20,7 @@ from ..optim.schedules import warmup_cosine
 from . import checkpoint as ckpt_lib
 from .train_step import (
     make_bcast_train_step,
+    make_overlap_allreduce_train_step,
     make_train_step,
     make_tuned_allreduce_train_step,
 )
@@ -52,6 +53,7 @@ class Trainer:
         explicit_sync = {
             "param_bcast": make_bcast_train_step,
             "tuned_allreduce": make_tuned_allreduce_train_step,
+            "overlap_allreduce": make_overlap_allreduce_train_step,
         }
         if self.run.sync_mode in explicit_sync:
             # calibrated empirical decisions (Tuner.save format) when the

@@ -147,6 +147,147 @@ print("PASS")
     )
 
 
+def test_overlap_tree_matches_barrier_tree(dist):
+    """ISSUE acceptance: the overlap scheduler's per-bucket results equal
+    the barrier pallreduce_tree results for random pytrees — pow2 and
+    non-pow2 rank counts, flat and hierarchical (inter-pod) path classes,
+    across depths, with and without chunked_copy staging."""
+    dist(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comm import pallreduce_tree, overlap_allreduce_tree
+
+rng = np.random.RandomState(0)
+
+def check(mesh_shape, names, axes, inter_pod_axes):
+    mesh = jax.make_mesh(mesh_shape, names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    nd = int(np.prod(mesh_shape))
+    tree = {"w": jnp.asarray(rng.randn(nd, 517).astype(np.float32)),
+            "b": jnp.asarray(rng.randn(nd, 1201).astype(np.float32)),
+            "s": jnp.asarray(rng.randn(nd, 33).astype(np.float32))}
+    specs = jax.tree.map(lambda _: P(*names), tree)
+
+    def run(fn):
+        def g(t):
+            sub = jax.tree.map(lambda x: x.reshape(x.shape[-1]), t)
+            out = fn(sub)
+            return jax.tree.map(lambda x: x[(None,) * len(names)], out)
+        f = jax.jit(lambda t: jax.shard_map(
+            g, mesh=mesh, in_specs=(specs,), out_specs=specs, check_vma=False)(t))
+        return jax.tree.map(np.asarray, f(jax.tree.map(
+            lambda x: x.reshape(mesh_shape + (x.shape[-1],)), tree)))
+
+    barrier = run(lambda t: pallreduce_tree(
+        t, axes, bucket_bytes=2048, inter_pod_axes=inter_pod_axes))
+    for depth in (None, 1, 2, 4):
+        for stage in (False, True):
+            ov = run(lambda t, d=depth, s=stage: overlap_allreduce_tree(
+                t, axes, bucket_bytes=2048, inter_pod_axes=inter_pod_axes,
+                overlap_depth=d, stage=s))
+            for k in barrier:
+                np.testing.assert_array_equal(
+                    barrier[k], ov[k],
+                    err_msg=f"{mesh_shape} depth={depth} stage={stage} leaf={k}")
+
+check((8,), ("data",), ["data"], ())            # pow2, flat
+check((6,), ("data",), ["data"], ())            # non-pow2
+check((2, 4), ("pod", "data"), ["data", "pod"], ("pod",))  # hierarchical
+print("PASS")
+""",
+        timeout=580,
+    )
+
+
+def test_reduce_family_pad_tails_non_divisible(dist):
+    """Satellite regression: zero-padded tails of non-divisible buffers
+    never corrupt reduce-family results — preduce / pallreduce /
+    preduce_scatter at awkward sizes and chunk counts, plus the max/min
+    combiner routing (one-shot path, combined before padding)."""
+    dist(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comm import pallreduce, preduce, preduce_scatter
+
+n = 6
+mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.RandomState(3)
+
+def run(fn, xs):
+    @jax.jit
+    def f(xs):
+        g = lambda b: fn(b[0])[None]
+        return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),),
+                             out_specs=P("data"), check_vma=False)(xs)
+    return np.asarray(f(xs))
+
+# sizes chosen so every chunking (schedule num_chunks, ring n-chunks)
+# leaves a pad tail: primes and prime-ish odd sizes
+for elems in (1, 7, 101, 1013):
+    xs = jnp.asarray(rng.randn(n, elems).astype(np.float32))
+    want = np.asarray(xs).sum(0)
+    for algo, kw in (("fused_rsb", {"num_chunks": 7}),
+                     ("ring_allreduce", {}), ("reduce_then_bcast", {})):
+        out = run(lambda b, a=algo, k=kw: pallreduce(b, "data", algo=a, **k), xs)
+        for r in range(n):
+            np.testing.assert_allclose(out[r], want, rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{algo}/{elems}")
+    out = run(lambda b: preduce(b, "data", root=2, algo="pipelined_reduce_chain",
+                                num_chunks=5), xs)
+    np.testing.assert_allclose(out[2], want, rtol=2e-5, atol=2e-5, err_msg=str(elems))
+    out = run(lambda b: preduce_scatter(b, "data"), xs)
+    shard = -(-elems // n)
+    padded = np.concatenate([want, np.zeros(n * shard - elems, np.float32)])
+    for r in range(n):
+        np.testing.assert_allclose(out[r], padded[r*shard:(r+1)*shard],
+                                   rtol=2e-5, atol=2e-5, err_msg=f"rs/{elems}")
+    # max/min combiners: routed through the XLA one-shots, pad appended
+    # AFTER combining (a zero tail must never win a max of negatives)
+    neg = jnp.asarray(-np.abs(np.asarray(xs)) - 1.0)
+    out = run(lambda b: pallreduce(b, "data", combiner="max"), neg)
+    np.testing.assert_allclose(out[0], np.asarray(neg).max(0), rtol=1e-6)
+    out = run(lambda b: preduce_scatter(b, "data", combiner="max"), neg)
+    wmax = np.concatenate([np.asarray(neg).max(0),
+                           np.zeros(n * shard - elems, np.float32)])
+    for r in range(n):
+        np.testing.assert_allclose(out[r], wmax[r*shard:(r+1)*shard], rtol=1e-6,
+                                   err_msg=f"max-rs/{elems}")
+print("PASS")
+""",
+        devices=6,
+        timeout=580,
+    )
+
+
+def test_serving_double_buffer_distribution_matches_barrier(dist):
+    """serve.engine.distribute_weights double-buffered mode: bucket k+1
+    stages through chunked_copy while bucket k broadcasts — identical
+    distributed weights to the barrier replay."""
+    dist(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.serve.engine import distribute_weights
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rng = np.random.RandomState(11)
+params = {"w1": jnp.asarray(rng.randn(64, 33).astype(np.float32)),
+          "w2": jnp.asarray(rng.randn(257,).astype(np.float32)),
+          "w3": jnp.asarray(rng.randn(5, 7, 3).astype(np.float32))}
+base = distribute_weights(params, mesh, bucket_bytes=2048)
+for depth in (1, 2, 3):
+    dbl = distribute_weights(params, mesh, bucket_bytes=2048,
+                             double_buffer=True, overlap_depth=depth)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(base[k]), np.asarray(dbl[k]),
+                                      err_msg=f"{k}@depth{depth}")
+print("PASS")
+"""
+    )
+
+
 def test_trainer_tuned_allreduce_matches_psum_baseline(dist):
     """ISSUE acceptance: sync_mode='tuned_allreduce' produces params
     allclose to the GSPMD/psum baseline on a multi-device mesh (identical
@@ -175,6 +316,41 @@ assert abs(h1[-1]["loss"] - h2[-1]["loss"]) < 2e-2, (h1[-1], h2[-1])
 for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
     np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
                                atol=5e-3, rtol=1e-2)
+print("PASS")
+""",
+        timeout=580,
+    )
+
+
+def test_trainer_overlap_allreduce_matches_tuned(dist):
+    """ISSUE acceptance (transitive leg): sync_mode='overlap_allreduce'
+    tracks sync_mode='tuned_allreduce' to float32 tolerance — same
+    per-bucket plans and summation order, only the dispatch schedule
+    differs. Together with the psum-baseline test this closes
+    overlap == tuned == psum."""
+    dist(
+        """
+import jax, numpy as np
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.train.trainer import Trainer
+from repro.launch.mesh import make_local_mesh
+
+cfg = get_config("xlstm-350m-smoke")
+mesh = make_local_mesh(1)
+runs = {}
+for mode in ("tuned_allreduce", "overlap_allreduce"):
+    run = RunConfig(total_steps=4, warmup_steps=1, sync_mode=mode,
+                    learning_rate=1e-3, seed=7)
+    params, _, hist = Trainer(cfg, run, mesh=mesh).train(
+        batch=8, seq=32, steps=4, log_every=3)
+    runs[mode] = (jax.device_get(params), hist)
+
+(pt, ht), (po, ho) = runs["tuned_allreduce"], runs["overlap_allreduce"]
+assert abs(ht[-1]["loss"] - ho[-1]["loss"]) < 1e-4, (ht[-1], ho[-1])
+for a, b in zip(jax.tree.leaves(pt), jax.tree.leaves(po)):
+    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                               atol=1e-6, rtol=1e-6)
 print("PASS")
 """,
         timeout=580,
