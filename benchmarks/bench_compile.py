@@ -1,0 +1,154 @@
+"""Compile-cost benchmark — unrolled vs compiled executor program size.
+
+The compiled schedule executor's claim is structural, so this suite measures
+it rather than asserting it: for points across the tuner grid it traces and
+lowers the SAME :class:`~repro.comm.CollectivePlan` through both executors
+(``comm.executors.execute_collective`` unrolled vs ``execute_compiled``
+fori_loop) and records jaxpr equation counts, HLO instruction counts, and
+trace+lower wall time. Rows land in the schema-gated
+``experiments/compile_table.json`` (``comm.tables.load_compile_table``);
+:func:`repro.comm.tables.check_compile_flatness` is the CI compile-size
+regression gate — the compiled executor's HLO instruction count must be
+FLAT in ``num_chunks`` while the unrolled one grows monotonically.
+
+Counts and lower times are host-side quantities (nothing executes), so
+``--dryrun`` runs the same measurement on a smaller grid; entries are
+branded ``dryrun`` all the same so downstream consumers know which grid
+produced them.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.comm.tables import check_compile_flatness, load_compile_table
+
+from .common import run_worker
+
+RANKS = [8, 16]
+# (op, algo, M, num_chunks sweep) — chain-family points sweep the chunk
+# count (the HLO-growth axis); ring-family points pin K == n by design
+POINTS = [
+    ("bcast", "pipelined_chain", 1 << 22, (4, 16, 64)),
+    ("bcast", "bidir_chain", 1 << 22, (4, 16, 64)),
+    ("allreduce", "fused_rsb", 1 << 22, (4, 16, 64)),
+    ("allreduce", "ring_allreduce", 1 << 22, (None,)),
+    ("allgather", "ring_allgather", 1 << 22, (None,)),
+    ("reduce_scatter", "ring_reduce_scatter", 1 << 22, (None,)),
+]
+
+WORKER = """
+import json, time
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comm import plan_collective, apply_plan
+
+
+def _sub_jaxprs(v):
+    import jax.core as jc
+    if isinstance(v, jc.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jc.Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _sub_jaxprs(x)
+
+
+def eqn_count(jaxpr):
+    total = len(jaxpr.eqns)
+    for eq in jaxpr.eqns:
+        for v in eq.params.values():
+            for sub in _sub_jaxprs(v):
+                total += eqn_count(sub)
+    return total
+
+
+def hlo_count(text):
+    return sum(1 for line in text.splitlines() if " = " in line)
+
+
+def bench(n, points):
+    mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    table = {}
+    for op, algo, M, K in points:
+        kw = {} if K is None else {"num_chunks": K}
+        plan = plan_collective(op, M, n, algo=algo, **kw)
+        lowered_sched = plan.lowered()
+        elems = max(M // 4, 1)
+        shape = (elems // n,) if op == "allgather" else (elems,)
+        sds = jax.ShapeDtypeStruct(shape, jnp.float32)
+        entry = {
+            "M": M,
+            "num_rounds": max(lowered_sched.num_rounds, 1),
+            "lane_classes": max(lowered_sched.num_classes, 1),
+        }
+        for mode, flag in (("unrolled", False), ("compiled", True)):
+            def g(b, flag=flag):
+                return apply_plan(plan, b, "data", compiled=flag)
+            f = jax.shard_map(g, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                              check_vma=False)
+            entry[f"{mode}_jaxpr_eqns"] = max(
+                eqn_count(jax.make_jaxpr(f)(sds).jaxpr), 1
+            )
+            t0 = time.perf_counter()
+            low = jax.jit(f).lower(sds)
+            entry[f"{mode}_lower_s"] = time.perf_counter() - t0
+            entry[f"{mode}_hlo"] = max(hlo_count(low.as_text()), 1)
+        table[f"n{n}/{op}/{algo}/K{plan.num_chunks}"] = entry
+    return table
+"""
+
+
+def rows(quick: bool = False, dryrun: bool = False):
+    ranks = RANKS[:1] if (quick or dryrun) else RANKS
+    points = [
+        (op, algo, M, ks[:2] if dryrun else ks) for op, algo, M, ks in POINTS
+    ]
+    table = {}
+    for n in ranks:
+        flat_points = [
+            (op, algo, M, k) for op, algo, M, ks in points for k in ks
+        ]
+        worker = WORKER + f"""
+print(json.dumps(bench({n}, {flat_points!r})))
+"""
+        table.update(run_worker(worker, devices=n))
+    if dryrun:
+        for entry in table.values():
+            entry["dryrun"] = True
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/compile_table.json", "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+    table = load_compile_table("experiments/compile_table.json")  # schema gate
+    check_compile_flatness(table)  # compile-size regression gate at source
+    out = []
+    for key, e in sorted(table.items()):
+        out.append(
+            {
+                "name": f"compile/{key}",
+                "us_per_call": e["compiled_lower_s"] * 1e6,
+                "derived": {
+                    "unrolled_hlo": e["unrolled_hlo"],
+                    "compiled_hlo": e["compiled_hlo"],
+                    "unrolled_jaxpr_eqns": e["unrolled_jaxpr_eqns"],
+                    "compiled_jaxpr_eqns": e["compiled_jaxpr_eqns"],
+                    "unrolled_lower_ms": e["unrolled_lower_s"] * 1e3,
+                    "compiled_lower_ms": e["compiled_lower_s"] * 1e3,
+                    "num_rounds": e["num_rounds"],
+                    "lane_classes": e["lane_classes"],
+                },
+            }
+        )
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for r in rows(quick=not args.full, dryrun=args.dryrun):
+        print(r["name"], f"{r['us_per_call']:.1f}", json.dumps(r["derived"]))

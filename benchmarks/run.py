@@ -6,6 +6,7 @@
   tuner: the tuning-framework crossover table           (paper Sec. IV-B)
   allreduce: gradient-sync strategies + per-op empirical table (repro.comm)
   overlap: bucket-streamed sync, planned vs simulated   (comm.overlap)
+  compile: unrolled-vs-compiled executor program size   (comm.executors)
 
 Prints ``name,us_per_call,derived`` CSV; also writes experiments/bench.json
 (and the tuner/allreduce suites their experiments/*_table.json artifacts —
@@ -34,6 +35,7 @@ def main() -> None:
 
     from . import (
         bench_allreduce,
+        bench_compile,
         bench_internode,
         bench_intranode,
         bench_overlap,
@@ -45,6 +47,7 @@ def main() -> None:
         "tuner": bench_tuner_table.rows,
         "allreduce": bench_allreduce.rows,
         "overlap": bench_overlap.rows,
+        "compile": bench_compile.rows,
         "fig1": bench_intranode.rows,
         "fig2": bench_internode.rows,
         "fig3": bench_vgg_cntk.rows,

@@ -30,7 +30,7 @@ from .api import (
     preduce,
     preduce_scatter,
 )
-from .executors import execute_collective, fused_rsb_fused
+from .executors import execute_collective, execute_compiled
 from .overlap import (
     OverlapPlan,
     execute_overlap,
@@ -38,10 +38,19 @@ from .overlap import (
     plan_overlap,
     simulate_overlap,
 )
-from .plan import CollectivePlan, decide, expected_wire_bytes, plan_collective
+from .plan import (
+    CollectivePlan,
+    decide,
+    expected_wire_bytes,
+    plan_cache_clear,
+    plan_cache_info,
+    plan_cached,
+    plan_collective,
+)
 from .tables import (
     TableSchemaError,
     load_bench,
+    load_compile_table,
     load_overlap_table,
     load_tuner_table,
     tuner_from_table,
@@ -54,10 +63,13 @@ __all__ = [
     "default_tuner",
     "CollectivePlan",
     "plan_collective",
+    "plan_cached",
+    "plan_cache_info",
+    "plan_cache_clear",
     "decide",
     "expected_wire_bytes",
     "execute_collective",
-    "fused_rsb_fused",
+    "execute_compiled",
     "apply_plan",
     "pbcast",
     "pbcast_tree",
@@ -76,5 +88,6 @@ __all__ = [
     "load_tuner_table",
     "load_bench",
     "load_overlap_table",
+    "load_compile_table",
     "tuner_from_table",
 ]

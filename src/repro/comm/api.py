@@ -19,8 +19,8 @@ from jax import lax
 
 from ..core import algorithms, bucketing
 from ..core.tuner import Tuner
-from .executors import execute_collective, fused_rsb_fused
-from .plan import ONE_SHOT, CollectivePlan, plan_collective
+from .executors import execute_collective, execute_compiled
+from .plan import ONE_SHOT, CollectivePlan, plan_cached
 
 __all__ = [
     "apply_plan",
@@ -34,9 +34,34 @@ __all__ = [
     "hierarchical_allreduce_axes",
 ]
 
-# generic-executor round budget before switching to a fused fori_loop
-# executor (HLO size; see core.algorithms.schedule_bcast's identical policy)
+# unrolled-executor round budget before the auto policy switches to the
+# compiled fori_loop replay (HLO size; core.algorithms.schedule_bcast
+# applies the same policy). Zero-waste lowerings (the ring family,
+# ring_allreduce included — per-round combine flags let both its phases
+# share one fully-active class) switch much earlier: compiled then
+# strictly dominates on both HLO size and wire bytes, so only the very
+# smallest rings stay on the exact unrolled replay.
 _MAX_UNROLLED_ROUNDS = 256
+_MIN_COMPILED_ROUNDS_ZERO_WASTE = 8
+
+
+def _use_compiled(plan: CollectivePlan, *, fused: bool, compiled: bool | None) -> bool:
+    """Executor routing: an explicit ``compiled`` wins; then a tuned
+    ``Decision.fused_path`` flag; then the round-count/zero-waste policy.
+    ``fused=False`` forces the exact unrolled replay (the parity baseline).
+    """
+    if compiled is not None:
+        return compiled
+    if not fused:
+        return False
+    if plan.decision.fused_path is not None:
+        return plan.decision.fused_path
+    lowered = plan.lowered()
+    if lowered is None or lowered.num_rounds == 0:
+        return False
+    if lowered.zero_waste:
+        return lowered.num_rounds >= _MIN_COMPILED_ROUNDS_ZERO_WASTE
+    return lowered.num_rounds > _MAX_UNROLLED_ROUNDS
 
 
 def _flat(x: jax.Array):
@@ -45,7 +70,7 @@ def _flat(x: jax.Array):
 
 
 # Reduce-family combiners the comm layer understands. The schedule executors
-# (execute_collective / fused_rsb_fused) implement SUM only; max/min route to
+# (execute_collective / execute_compiled) implement SUM only; max/min route to
 # the XLA one-shot collectives. Identity elements justify the pad tail a
 # non-divisible buffer grows before chunking: a pad lane must never perturb
 # the combined value (zeros are only sound for sum — the original bug).
@@ -96,13 +121,28 @@ def _unchunked(buf: jax.Array, pad: int, shape, dtype):
 # ---------------------------------------------------------------------------
 
 
-def apply_plan(plan: CollectivePlan, x: jax.Array, axis_name, *, fused: bool = True) -> jax.Array:
+def apply_plan(
+    plan: CollectivePlan,
+    x: jax.Array,
+    axis_name,
+    *,
+    fused: bool = True,
+    compiled: bool | None = None,
+) -> jax.Array:
     """Execute a pre-built :class:`CollectivePlan` on ``x`` inside
     ``shard_map`` — exactly the schedule the plan carries, no re-deciding.
 
     bcast/reduce/allreduce take and return the full buffer; allgather takes
     the per-rank shard and returns the ``(n, *shard)`` stack; reduce_scatter
     takes the full buffer and returns the rank's flat shard.
+
+    Executor routing (see :func:`_use_compiled`): ``compiled=True`` forces
+    the fori_loop compiled replay (``execute_compiled`` — O(1) HLO in chunk
+    count), ``compiled=False`` the exact unrolled replay, ``None`` the tuned
+    / round-count policy. Donation contract: consumers jit the surrounding
+    program with the communicated buffers donated
+    (``jax.jit(..., donate_argnums)``) so the compiled replay's loop carry
+    and the fused kernel's aliasing update the buffer in place.
     """
     if plan.algo == "noop":
         return x if plan.op != "allgather" else x[None]
@@ -115,41 +155,21 @@ def apply_plan(plan: CollectivePlan, x: jax.Array, axis_name, *, fused: bool = T
             return algorithms.xla_allgather_bcast(x, axis_name, root=plan.root)
         return lax.all_gather(x, axis_name, axis=0)
     sched = plan.schedule
+    run = execute_compiled if _use_compiled(plan, fused=fused, compiled=compiled) else execute_collective
     if plan.op == "allgather":
         flat = jnp.ravel(x)
         buf = jnp.zeros((plan.n, flat.size), flat.dtype)
         buf = lax.dynamic_update_slice(buf, flat[None], (lax.axis_index(axis_name), 0))
-        out = execute_collective(sched, buf, axis_name)
+        out = run(sched, buf, axis_name)
         return out.reshape((plan.n,) + x.shape)
     if plan.op == "reduce_scatter":
         buf, _pad = _chunked(jnp.ravel(x), plan.n, combiner="sum")
-        out = execute_collective(sched, buf, axis_name)
+        out = run(sched, buf, axis_name)
         return lax.dynamic_slice(out, (lax.axis_index(axis_name), 0), (1, buf.shape[1]))[0]
     flat, _M = _flat(x)
-    # fused fori_loop executors keep HLO size independent of the chunk count
-    if (
-        plan.op == "bcast"
-        and plan.algo == "pipelined_chain"
-        and fused
-        and sched.num_rounds > _MAX_UNROLLED_ROUNDS
-    ):
-        buf, pad = _chunked(flat, plan.num_chunks)
-        out = algorithms.pipelined_chain_fused(buf, axis_name, root=plan.root)
-        return _unchunked(out, pad, x.shape, x.dtype)
-    if plan.op == "allreduce" and plan.algo == "ring_allreduce" and fused:
-        return algorithms.ring_allreduce(x, axis_name)
-    if (
-        plan.op == "allreduce"
-        and plan.algo == "fused_rsb"
-        and fused
-        and sched.num_rounds > _MAX_UNROLLED_ROUNDS
-    ):
-        buf, pad = _chunked(flat, plan.num_chunks, combiner="sum")
-        out = fused_rsb_fused(buf, axis_name, root=plan.root)
-        return _unchunked(out, pad, x.shape, x.dtype)
     combiner = "sum" if plan.op in ("reduce", "allreduce") else None
     buf, pad = _chunked(flat, sched.num_chunks, combiner=combiner)
-    out = execute_collective(sched, buf, axis_name)
+    out = run(sched, buf, axis_name)
     return _unchunked(out, pad, x.shape, x.dtype)
 
 
@@ -168,6 +188,7 @@ def pbcast(
     tuner: Tuner | None = None,
     inter_pod: bool = False,
     fused: bool = True,
+    compiled: bool | None = None,
 ) -> jax.Array:
     """Broadcast ``x`` from ``root`` over the named mesh axis (must be called
     inside ``shard_map``; every rank passes a same-shape buffer and receives
@@ -181,11 +202,11 @@ def pbcast(
     if algo == "xla_allgather":
         return algorithms.xla_allgather_bcast(x, axis_name, root=root)
     _flat_x, M = _flat(x)
-    plan = plan_collective(
+    plan = plan_cached(
         "bcast", M, n, root=root, algo=algo, num_chunks=num_chunks,
         tuner=tuner, inter_pod=inter_pod,
     )
-    return apply_plan(plan, x, axis_name, fused=fused)
+    return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled)
 
 
 def preduce(
@@ -198,6 +219,7 @@ def preduce(
     tuner: Tuner | None = None,
     inter_pod: bool = False,
     combiner: str = "sum",
+    compiled: bool | None = None,
 ) -> jax.Array:
     """Reduce-to-root (``combiner``: sum by default). Non-root ranks return
     garbage partial sums by design (MPI_Reduce semantics) — only the root's
@@ -215,11 +237,11 @@ def preduce(
             raise ValueError(f"combiner {combiner!r} supports algo='auto' only")
         return _ONE_SHOT_REDUCERS[combiner](x, axis_name)
     _flat_x, M = _flat(x)
-    plan = plan_collective(
+    plan = plan_cached(
         "reduce", M, n, root=root, algo=algo, num_chunks=num_chunks,
         tuner=tuner, inter_pod=inter_pod,
     )
-    return apply_plan(plan, x, axis_name)
+    return apply_plan(plan, x, axis_name, compiled=compiled)
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +259,7 @@ def pallreduce(
     inter_pod: bool = False,
     fused: bool = True,
     combiner: str = "sum",
+    compiled: bool | None = None,
 ) -> jax.Array:
     """All-reduce (``combiner``: sum by default) over the named axis through
     the tuned plan layer.
@@ -259,11 +282,11 @@ def pallreduce(
     if algo == "xla_psum":
         return lax.psum(x, axis_name)
     _flat_x, M = _flat(x)
-    plan = plan_collective(
+    plan = plan_cached(
         "allreduce", M, n, algo=algo, num_chunks=num_chunks,
         tuner=tuner, inter_pod=inter_pod,
     )
-    return apply_plan(plan, x, axis_name, fused=fused)
+    return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled)
 
 
 def pallgather(
@@ -273,6 +296,7 @@ def pallgather(
     algo: str = "auto",
     tuner: Tuner | None = None,
     inter_pod: bool = False,
+    compiled: bool | None = None,
 ) -> jax.Array:
     """All-gather the per-rank shard ``x`` into a stacked ``(n, *x.shape)``
     array (the ``lax.all_gather(axis=0)`` convention).
@@ -287,10 +311,10 @@ def pallgather(
     if algo == "xla_allgather":
         return lax.all_gather(x, axis_name, axis=0)
     M = n * x.size * x.dtype.itemsize  # full gathered payload
-    plan = plan_collective(
+    plan = plan_cached(
         "allgather", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
     )
-    return apply_plan(plan, x, axis_name)
+    return apply_plan(plan, x, axis_name, compiled=compiled)
 
 
 def preduce_scatter(
@@ -301,6 +325,7 @@ def preduce_scatter(
     tuner: Tuner | None = None,
     inter_pod: bool = False,
     combiner: str = "sum",
+    compiled: bool | None = None,
 ) -> jax.Array:
     """Reduce-scatter (``combiner``: sum by default): every rank contributes
     the full flat buffer and receives its rank-indexed shard of the combined
@@ -320,12 +345,12 @@ def preduce_scatter(
         buf, _pad = _chunked(full, n)
         return lax.dynamic_slice(buf, (lax.axis_index(axis_name), 0), (1, buf.shape[1]))[0]
     M = flat.size * flat.dtype.itemsize
-    plan = plan_collective(
+    plan = plan_cached(
         "reduce_scatter", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
     )
     if plan.algo == "noop":
         return flat
-    return apply_plan(plan, x, axis_name)
+    return apply_plan(plan, x, axis_name, compiled=compiled)
 
 
 # ---------------------------------------------------------------------------
@@ -385,6 +410,7 @@ def pallreduce_tree(
     inter_pod_axes: Sequence = (),
     stage: bool = False,
     stage_chunk: int = 64 * 1024,
+    compiled: bool | None = None,
 ) -> Any:
     """Hierarchical bucketed all-reduce over one or more mesh axes.
 
@@ -407,7 +433,8 @@ def pallreduce_tree(
 
             b = chunked_copy(b, chunk_elems=stage_chunk)
         for ax in axes:
-            b = pallreduce(b, ax, algo=algo, tuner=tuner, inter_pod=(ax in inter))
+            b = pallreduce(b, ax, algo=algo, tuner=tuner, inter_pod=(ax in inter),
+                           compiled=compiled)
         out.append(b)
     return bucketing.unpack_buckets(out, spec)
 

@@ -1,17 +1,28 @@
 """shard_map executors for the generalized (combine-aware) schedule IR.
 
-:func:`execute_collective` replays ANY :class:`core.schedules.Schedule` —
-bcast, reduce, allreduce, allgather, reduce_scatter — with one
-``lax.ppermute`` per lane per round; combining transfers accumulate at the
-destination. :func:`fused_rsb_fused` is the production-path fori_loop
-executor for the fused allreduce chain (two ppermutes per iteration, HLO
-size independent of chunk count), mirroring
-``core.algorithms.pipelined_chain_fused``.
+Two replay strategies for ANY :class:`core.schedules.Schedule` — bcast,
+reduce, allreduce, allgather, reduce_scatter:
+
+* :func:`execute_collective` — the *unrolled* (exact) executor: one
+  ``lax.ppermute`` per lane per round, each round emitted into HLO. Sends
+  exactly the schedule's transfers, but program size grows as
+  O(num_chunks x rounds).
+* :func:`execute_compiled` — the *compiled* executor: replays the host-side
+  lowering (``core.schedules.lower_schedule`` — dense per-round index
+  tables + one static permutation per lane class) with ONE ``lax.fori_loop``
+  over rounds. HLO size is O(num_lane_classes), independent of chunk count
+  and round count; the round's merge runs through the fused Pallas
+  combine-update kernel (:mod:`repro.kernels.combine_update`) in one VMEM
+  pass. Inactive (fill/drain) rounds of a class carry masked garbage blocks,
+  exactly like the old hand-written fori_loop executors
+  (``pipelined_chain_fused`` / the deleted ``fused_rsb_fused``) — which are
+  special cases of this generic path.
 
 Lanes within a round are applied sequentially at trace level; builders
 guarantee no same-round read-after-write at any rank (the numpy simulator
-uses strict round-snapshot semantics, and the fused-vs-generic equality
-tests would catch a violation).
+uses strict round-snapshot semantics, and the compiled-vs-unrolled equality
+tests would catch a violation). The lane partition itself is hoisted into
+the host-side lowering — computed once per schedule, never at trace time.
 """
 from __future__ import annotations
 
@@ -21,32 +32,14 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core.schedules import Schedule
+from ..core.schedules import LoweredSchedule, Schedule, lower_schedule
+from ..kernels.combine_update import fused_combine_update
 
-__all__ = ["execute_collective", "fused_rsb_fused"]
+__all__ = ["execute_collective", "execute_compiled"]
 
 
-def _per_rank(values: np.ndarray, axis_name):
+def _per_rank(values, axis_name):
     return jnp.asarray(values)[lax.axis_index(axis_name)]
-
-
-def _lanes(transfers):
-    """Partition a round's transfers into ppermute lanes: within one lane
-    each rank is a source at most once AND a destination at most once, and
-    all transfers share the combine flag. Multi-lane rounds (bidir chain,
-    fused_rsb) run on disjoint full-duplex links concurrently on TPU."""
-    lanes: list[list] = []
-    for t in transfers:
-        for lane in lanes:
-            if (
-                lane[0].combine == t.combine
-                and all(t.src != u.src and t.dst != u.dst for u in lane)
-            ):
-                lane.append(t)
-                break
-        else:
-            lanes.append([t])
-    return lanes
 
 
 def _execute_lane(transfers, buf, axis_name, n):
@@ -67,66 +60,89 @@ def _execute_lane(transfers, buf, axis_name, n):
     current = lax.dynamic_slice(buf, (r0, 0), (count, buf.shape[1]))
     on_dst = _per_rank(is_dst, axis_name)
     if combine:
-        merged = current + jnp.where(on_dst, received, jnp.zeros_like(received))
+        # where(on_dst, cur + recv, cur) — the same masked-row form as the
+        # compiled executor's fused kernel, so the two are bit-identical
+        merged = jnp.where(on_dst, current + received, current)
     else:
         merged = jnp.where(on_dst, received, current)
     return lax.dynamic_update_slice(buf, merged, (r0, 0))
 
 
 def execute_collective(schedule: Schedule, buf: jax.Array, axis_name) -> jax.Array:
-    """Replay any schedule over a ``(num_chunks, chunk_elems)`` buffer."""
+    """Replay any schedule over a ``(num_chunks, chunk_elems)`` buffer,
+    round by round (unrolled HLO). The lane partition comes from the cached
+    host-side lowering — once per schedule, not once per trace."""
     assert buf.ndim == 2 and buf.shape[0] == schedule.num_chunks, (
         buf.shape,
         schedule.num_chunks,
     )
     n = schedule.n
-    for rnd in schedule.rounds:
-        if not rnd.transfers:
-            continue
-        for lane in _lanes(rnd.transfers):
+    for lanes in lower_schedule(schedule).round_lanes:
+        for lane in lanes:
             buf = _execute_lane(lane, buf, axis_name, n)
     return buf
 
 
-def fused_rsb_fused(buf: jax.Array, axis_name, *, root: int = 0, unroll: int = 1) -> jax.Array:
-    """Fused fori_loop executor for the fused_rsb allreduce chain.
+def execute_compiled(
+    schedule: Schedule | LoweredSchedule,
+    buf: jax.Array,
+    axis_name,
+    *,
+    unroll: int = 1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Compiled replay: one ``lax.fori_loop`` over rounds, one ppermute +
+    one fused Pallas combine-update per lane class per iteration.
 
-    ``buf``: (num_chunks, chunk_elems) — every rank's local contribution on
-    entry, the element-wise sum on exit at every rank. Emits exactly two
-    ppermutes (reduce lane + bcast lane) inside a loop of
-    ``num_chunks + 2n - 3`` rounds; equals the unrolled
-    ``comm.schedules.fused_rsb`` schedule transfer-for-transfer.
+    ``buf``: (num_chunks, chunk_elems). The per-round index tables ride
+    along as small int32 constants indexed ``[round, rank]`` inside the
+    loop, so HLO size does not depend on ``num_chunks`` or the round count.
+    Donation contract: callers jit with the buffer donated
+    (``jax.jit(..., donate_argnums)``) — the loop carry plus the kernel's
+    ``input_output_aliases`` then update the buffer in place, so no round
+    materializes a second full copy.
+
+    shard_map note: the fused Pallas kernel has no replication rule on
+    jax 0.4.x, so the surrounding ``shard_map`` must pass
+    ``check_vma=False`` — the same requirement the ``chunked_copy`` staging
+    paths already impose; every in-repo consumer does.
     """
-    n = lax.axis_size(axis_name)
-    if n == 1:
+    lowered = (
+        schedule if isinstance(schedule, LoweredSchedule) else lower_schedule(schedule)
+    )
+    assert buf.ndim == 2 and buf.shape[0] == lowered.num_chunks, (
+        buf.shape,
+        lowered.num_chunks,
+    )
+    if lowered.num_rounds == 0:
         return buf
-    K, chunk = buf.shape
-    pos = (lax.axis_index(axis_name) - root) % n
-    red_perm = [((root + p) % n, (root + p - 1) % n) for p in range(1, n)]
-    bc_perm = [((root + p) % n, (root + p + 1) % n) for p in range(n - 1)]
+    chunk = buf.shape[1]
+    rank = lax.axis_index(axis_name)
+    tables = [
+        (
+            cls,
+            jnp.asarray(cls.send_start),
+            jnp.asarray(cls.recv_start),
+            jnp.asarray(cls.lo),
+            jnp.asarray(cls.hi),
+            jnp.asarray(cls.combine),
+        )
+        for cls in lowered.classes
+    ]
 
     def body(s, b):
-        # operands read the round-start buffer; the two write chunks are
-        # disjoint whenever both are valid (see comm.schedules.fused_rsb)
-        c_rs = jnp.clip(s - (n - 1 - pos), 0, K - 1)
-        red_out = lax.dynamic_slice(b, (c_rs, 0), (1, chunk))
-        c_bs = jnp.clip(s - (n - 1) - pos, 0, K - 1)
-        bc_out = lax.dynamic_slice(b, (c_bs, 0), (1, chunk))
-        red_in = lax.ppermute(red_out, axis_name, red_perm)
-        bc_in = lax.ppermute(bc_out, axis_name, bc_perm)
+        for cls, send, recv, lo, hi, combine in tables:
+            block = lax.dynamic_slice(b, (send[s, rank], 0), (cls.block, chunk))
+            received = lax.ppermute(block, axis_name, cls.perm)
+            b = fused_combine_update(
+                b,
+                received,
+                recv[s, rank],
+                lo[s, rank],
+                hi[s, rank],
+                combine=combine[s],
+                interpret=interpret,
+            )
+        return b
 
-        c_rin = s - (n - 2) + pos           # chunk arriving on the reduce lane
-        red_valid = (pos <= n - 2) & (c_rin >= 0) & (c_rin < K)
-        c_rin_c = jnp.clip(c_rin, 0, K - 1)
-        cur = lax.dynamic_slice(b, (c_rin_c, 0), (1, chunk))
-        merged = jnp.where(red_valid, cur + red_in, cur)
-        b = lax.dynamic_update_slice(b, merged, (c_rin_c, 0))
-
-        c_bin = s - (n - 2) - pos           # chunk arriving on the bcast lane
-        bc_valid = (pos >= 1) & (c_bin >= 0) & (c_bin < K)
-        c_bin_c = jnp.clip(c_bin, 0, K - 1)
-        cur = lax.dynamic_slice(b, (c_bin_c, 0), (1, chunk))
-        merged = jnp.where(bc_valid, bc_in, cur)
-        return lax.dynamic_update_slice(b, merged, (c_bin_c, 0))
-
-    return lax.fori_loop(0, K + 2 * n - 3, body, buf, unroll=unroll)
+    return lax.fori_loop(0, lowered.num_rounds, body, buf, unroll=unroll)

@@ -40,7 +40,7 @@ from ..core import bucketing, cost_model
 from ..core.bucketing import BucketSpec
 from ..core.tuner import Tuner, default_tuner
 from . import api as comm_api
-from .plan import CollectivePlan, plan_collective
+from .plan import CollectivePlan, plan_cached
 
 __all__ = [
     "OverlapPlan",
@@ -147,7 +147,7 @@ def plan_overlap(
     plans: dict[str, tuple[CollectivePlan, ...]] = {}
     for ax, n in axes:
         plans[ax] = tuple(
-            plan_collective(
+            plan_cached(
                 op, max(M, 1), n, root=root, algo=algo, tuner=t,
                 inter_pod=(ax in inter),
             )
@@ -278,6 +278,7 @@ def execute_overlap(
     stage: bool = False,
     stage_chunk: int = 64 * 1024,
     fused: bool = True,
+    compiled: bool | None = None,
 ) -> Any:
     """Replay an :class:`OverlapPlan` on concrete values inside
     ``shard_map``: buckets issue in dispatch order, and the next
@@ -310,7 +311,9 @@ def execute_overlap(
                 _stage(j)
         b = staged.pop(k)
         for ax in oplan.axes:
-            b = comm_api.apply_plan(oplan.plans[ax][k], b, ax, fused=fused)
+            b = comm_api.apply_plan(
+                oplan.plans[ax][k], b, ax, fused=fused, compiled=compiled
+            )
         out[k] = b
     return bucketing.unpack_buckets(out, oplan.spec)
 
@@ -327,6 +330,7 @@ def overlap_allreduce_tree(
     compute_s: float = 0.0,
     stage: bool = False,
     stage_chunk: int = 64 * 1024,
+    compiled: bool | None = None,
 ) -> Any:
     """Bucket-streamed hierarchical all-reduce: the overlap-engine analogue
     of :func:`repro.comm.api.pallreduce_tree` (same bucketing, same
@@ -349,4 +353,6 @@ def overlap_allreduce_tree(
         reverse=True,
         spec=spec,
     )
-    return execute_overlap(oplan, tree, stage=stage, stage_chunk=stage_chunk)
+    return execute_overlap(
+        oplan, tree, stage=stage, stage_chunk=stage_chunk, compiled=compiled
+    )

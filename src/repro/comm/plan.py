@@ -10,13 +10,22 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import OrderedDict
 
 from ..core import cost_model
-from ..core.schedules import ALGORITHMS, Schedule, build
+from ..core.schedules import ALGORITHMS, LoweredSchedule, Schedule, build, lower_schedule
 from ..core.tuner import OPS, Decision, Tuner, default_tuner
 from . import schedules as comm_schedules
 
-__all__ = ["CollectivePlan", "plan_collective", "decide", "expected_wire_bytes"]
+__all__ = [
+    "CollectivePlan",
+    "plan_collective",
+    "plan_cached",
+    "plan_cache_info",
+    "plan_cache_clear",
+    "decide",
+    "expected_wire_bytes",
+]
 
 # one-shot XLA baselines (no schedule; lowered to a native collective),
 # and the ops each can legally implement — an op/one-shot mismatch must
@@ -77,6 +86,11 @@ class CollectivePlan:
         if self.algo == "xla_allgather":
             return self.n * self.M
         return 0
+
+    def lowered(self) -> LoweredSchedule | None:
+        """Dense round tables for the compiled executor (host-side, cached
+        per schedule in ``core.schedules.lower_schedule``)."""
+        return None if self.schedule is None else lower_schedule(self.schedule)
 
     def timed_rounds_s(self, hw: cost_model.Hardware | None = None) -> float:
         """Round-accurate simulator clock for this plan's schedule."""
@@ -187,6 +201,76 @@ def plan_collective(
             dec = dataclasses.replace(dec, num_chunks=sched.num_chunks,
                                       chunk_bytes=math.ceil(M / max(1, sched.num_chunks)))
     return CollectivePlan(op, M, n, root, inter_pod, dec, sched)
+
+
+# ---------------------------------------------------------------------------
+# host-side plan cache
+#
+# Trainers and serving engines resolve the SAME (op, M, n) points every step
+# — re-pricing the tuner and re-building (and re-lowering) an identical
+# schedule each call is pure host overhead at trace time. The cache key
+# carries the tuner's content fingerprint, so any `Tuner.record` /
+# `record_overlap` / `calibrate` (a new empirical row, a tuned depth)
+# changes the key and stale plans are never replayed after calibration.
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: "OrderedDict[tuple, CollectivePlan]" = OrderedDict()
+_PLAN_CACHE_MAX = 512
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cached(
+    op: str,
+    M: int,
+    n: int,
+    *,
+    root: int = 0,
+    algo: str = "auto",
+    num_chunks: int | None = None,
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+) -> CollectivePlan:
+    """LRU-cached :func:`plan_collective`. Key: (op, M, n, root, algo,
+    num_chunks, inter_pod, tuner fingerprint). The buffer dtype is already
+    folded into ``M`` (a byte count), so same-point calls from different
+    dtypes correctly share one plan. Plans are frozen and their schedules
+    immutable, so sharing the object across callers (and across traced
+    programs) is safe; the pre-lowered round tables ride along via
+    ``CollectivePlan.lowered()``'s own cache."""
+    t = tuner or default_tuner()
+    key = (
+        op,
+        int(M),
+        int(n),
+        int(root),
+        algo,
+        None if num_chunks is None else int(num_chunks),
+        bool(inter_pod),
+        t.fingerprint(),
+    )
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _PLAN_CACHE.move_to_end(key)
+        _PLAN_CACHE_STATS["hits"] += 1
+        return plan
+    _PLAN_CACHE_STATS["misses"] += 1
+    plan = plan_collective(
+        op, M, n, root=root, algo=algo, num_chunks=num_chunks, tuner=t,
+        inter_pod=inter_pod,
+    )
+    _PLAN_CACHE[key] = plan
+    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
+    return plan
+
+
+def plan_cache_info() -> dict:
+    return dict(_PLAN_CACHE_STATS, size=len(_PLAN_CACHE), maxsize=_PLAN_CACHE_MAX)
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+    _PLAN_CACHE_STATS.update(hits=0, misses=0)
 
 
 def expected_wire_bytes(op: str, algo: str, M: int, n: int, num_chunks: int = 1) -> float:

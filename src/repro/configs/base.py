@@ -246,6 +246,11 @@ class RunConfig:
     # is regenerated by CI in --dryrun mode and branded as such — Tuner.load
     # refuses dryrun tables, so point this at a table from a device run.
     tuner_table: Optional[str] = None
+    # collective executor for the repro.comm sync modes: True pins the
+    # compiled fori_loop replay (O(1)-HLO schedule executor), False the
+    # exact unrolled replay, None (default) the tuned round-count policy
+    # (Decision.fused_path / comm.api.apply_plan)
+    compiled_collectives: Optional[bool] = None
     # in-flight bucket window for sync_mode='overlap_allreduce': None tunes
     # it (tuner table overlap_depth, else cost_model.optimal_overlap_depth)
     overlap_depth: Optional[int] = None

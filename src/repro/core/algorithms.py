@@ -1,12 +1,13 @@
 """Fused shard_map executors + XLA one-shot baselines for the bcast family.
 
 Generic schedule replay lives in :mod:`repro.comm.executors`
-(``execute_collective`` — one ``lax.ppermute`` per lane per round, all ops);
-:func:`execute_schedule` / :func:`execute_reduce_schedule` here are thin
-compatibility wrappers over it. For the paper's pipelined chain a fused
-``lax.fori_loop`` executor (:func:`pipelined_chain_fused`) emits a single
-ppermute in the loop body — the production path (compact HLO independent of
-chunk count); :func:`ring_allreduce` is its allreduce sibling.
+(``execute_collective`` unrolled / ``execute_compiled`` fori_loop over the
+host-side lowering — the production path, compact HLO independent of chunk
+count for EVERY schedule); :func:`execute_schedule` /
+:func:`execute_reduce_schedule` here are thin compatibility wrappers. The
+hand-written :func:`pipelined_chain_fused` / :func:`ring_allreduce`
+fori_loop executors remain as the original single-op references the generic
+compiled executor is tested against.
 
 All functions here run *inside* ``jax.shard_map`` over a named axis. The
 buffer convention is ``(num_chunks, chunk_elems)``; every rank holds a buffer
@@ -191,13 +192,18 @@ def schedule_bcast(
     if n == 1:
         return buf
     num_chunks = buf.shape[0]
-    # The fused fori_loop executor emits one ppermute regardless of chunk
-    # count, but its constant ring perm transmits garbage during pipeline
-    # fill/drain ((K + n - 2)/K x the useful bytes). The unrolled schedule
-    # executor sends EXACTLY the schedule's transfers. Use the exact one
-    # while its HLO stays small; fall back to fused for huge round counts.
-    if algo == "pipelined_chain" and fused and (num_chunks + n - 2) > 256:
-        return pipelined_chain_fused(buf, axis_name, root=root)
+    # The compiled fori_loop executor emits one ppermute per lane class
+    # regardless of chunk count, but its constant perms transmit garbage
+    # during pipeline fill/drain ((K + n - 2)/K x the useful bytes). The
+    # unrolled schedule executor sends EXACTLY the schedule's transfers.
+    # Use the exact one while its HLO stays small; fall back to the generic
+    # compiled replay for huge round counts (same policy as
+    # comm.api.apply_plan).
+    if algo in ("pipelined_chain", "bidir_chain") and fused and (num_chunks + n - 2) > 256:
+        from ..comm.executors import execute_compiled
+
+        sched = build(algo, n, root, num_chunks=num_chunks, **algo_kw)
+        return execute_compiled(sched, buf, axis_name)
     if algo in ("pipelined_chain", "bidir_chain"):
         sched = build(algo, n, root, num_chunks=num_chunks, **algo_kw)
     elif algo == "scatter_allgather":

@@ -21,13 +21,20 @@ range ``[chunk_start, chunk_start + chunk_count)``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable, Tuple
+
+import numpy as np
 
 __all__ = [
     "Transfer",
     "Round",
     "Schedule",
+    "LaneClass",
+    "LoweredSchedule",
+    "lane_partition",
+    "lower_schedule",
     "direct",
     "chain",
     "pipelined_chain",
@@ -134,6 +141,198 @@ class Schedule:
 def _rot(rank: int, root: int, n: int) -> int:
     """Relabel logical rank (root-relative) to physical rank."""
     return (rank + root) % n
+
+
+# ---------------------------------------------------------------------------
+# Host-side lowering: schedule -> dense per-round index tables
+#
+# The trace-level executor (comm.executors.execute_collective) unrolls every
+# round into HLO, so program size grows with the round count. Lowering turns
+# a schedule into a handful of *lane classes* — each a static ppermute
+# permutation plus dense (num_rounds, n) numpy index tables — which the
+# compiled executor (comm.executors.execute_compiled) replays with ONE
+# lax.fori_loop over rounds: HLO size is O(num_classes), independent of
+# num_chunks and round count. All of this runs once per schedule on the host
+# (cached), never at trace time.
+# ---------------------------------------------------------------------------
+
+
+def lane_partition(transfers) -> list[list[Transfer]]:
+    """Partition a round's transfers into ppermute lanes: within one lane
+    each rank is a source at most once AND a destination at most once, and
+    all transfers share the combine flag. Multi-lane rounds (bidir chain,
+    fused_rsb) run on disjoint full-duplex links concurrently on TPU.
+
+    Greedy first-fit is O(T^2) in the round's transfer count — which is why
+    it lives in the host-side lowering (computed once per schedule via
+    :func:`lower_schedule`), not at trace time."""
+    lanes: list[list[Transfer]] = []
+    for t in transfers:
+        for lane in lanes:
+            if (
+                lane[0].combine == t.combine
+                and all(t.src != u.src and t.dst != u.dst for u in lane)
+            ):
+                lane.append(t)
+                break
+        else:
+            lanes.append([t])
+    return lanes
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LaneClass:
+    """One static ppermute 'wire' of the compiled executor.
+
+    ``perm`` is the union of every (src, dst) pair the class ever carries —
+    a valid permutation fragment (each rank a source at most once, a
+    destination at most once) held CONSTANT across rounds; rounds where a
+    pair is inactive send a clipped garbage block that the destination's
+    ``lo == hi`` window masks away (exactly the fill/drain discipline of the
+    old hand-written fori_loop executors). ``combine`` is PER ROUND (a class
+    carries one lane per round, and that lane's combine flag may differ
+    between rounds) — this is what lets ring_allreduce's reduce-scatter and
+    allgather phases share one fully-active class instead of two
+    half-idle ones. The dense tables are indexed ``[round, rank]``:
+
+      * ``send_start`` — first buffer row the rank slices into its outgoing
+        block (clipped to ``num_chunks - block``);
+      * ``recv_start`` — first buffer row the incoming block lands on
+        (same transfer's ``chunk_start``, identically clipped, so the row
+        alignment inside the block is shared by both ends);
+      * ``lo`` / ``hi`` — the half-open row window of the block that is
+        actually valid at the destination this round (``lo == hi`` when the
+        rank is not a destination).
+    """
+
+    perm: Tuple[Tuple[int, int], ...]
+    combine: np.ndarray             # (num_rounds,) int32: 1 = accumulate
+    block: int                      # block height (max chunk_count it carries)
+    send_start: np.ndarray          # (num_rounds, n) int32
+    recv_start: np.ndarray          # (num_rounds, n) int32
+    lo: np.ndarray                  # (num_rounds, n) int32
+    hi: np.ndarray                  # (num_rounds, n) int32
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LoweredSchedule:
+    """Dense round tables + hoisted lane partition for one schedule."""
+
+    name: str
+    kind: str
+    n: int
+    num_chunks: int
+    classes: Tuple[LaneClass, ...]
+    # lane partition per (non-empty) round, in schedule order — the unrolled
+    # executor replays these; computed once here, never at trace time
+    round_lanes: Tuple[Tuple[Tuple[Transfer, ...], ...], ...]
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.round_lanes)
+
+    @property
+    def num_classes(self) -> int:
+        return len(self.classes)
+
+    def lane_counts(self) -> Tuple[int, ...]:
+        """Lanes per round (pinned by the lane-partition unit tests)."""
+        return tuple(len(lanes) for lanes in self.round_lanes)
+
+    def wire_chunks_exact(self) -> int:
+        """Chunk-transfers the exact (unrolled) replay puts on the wire."""
+        return sum(
+            t.chunk_count for lanes in self.round_lanes for lane in lanes for t in lane
+        )
+
+    def wire_chunks_compiled(self) -> int:
+        """Chunk-transfers the compiled replay puts on the wire: every class
+        sends its full block over its full permutation every round (inactive
+        pairs carry masked garbage — the compiled executor trades fill/drain
+        wire for O(1) HLO)."""
+        return self.num_rounds * sum(len(c.perm) * c.block for c in self.classes)
+
+    @property
+    def zero_waste(self) -> bool:
+        """True when the compiled replay sends exactly the schedule's bytes
+        (fully-active rounds, e.g. the ring family) — compiled then
+        dominates the unrolled executor outright."""
+        return self.wire_chunks_compiled() == self.wire_chunks_exact()
+
+
+@functools.lru_cache(maxsize=256)
+def lower_schedule(schedule: Schedule) -> LoweredSchedule:
+    """Lower a schedule to dense per-round index tables (host-side, cached).
+
+    Greedy class assignment: walk rounds in order; each lane joins the
+    first class whose permutation it can extend without conflict (a rank
+    already sending must keep its destination; a new pair must not reuse an
+    occupied destination), one lane per class per round. The combine flag is
+    recorded per round, not per class, so a class may carry combining rounds
+    and overwriting rounds (ring_allreduce: one class for both phases).
+    Chain/ring schedules collapse to 1-2 classes regardless of chunk count;
+    tree schedules get O(log n) classes (one per doubling level).
+    """
+    K = max(schedule.num_chunks, 1)
+    n = schedule.n
+    rounds = [r for r in schedule.rounds if r.transfers]
+    round_lanes = tuple(
+        tuple(tuple(lane) for lane in lane_partition(r.transfers)) for r in rounds
+    )
+    T = len(rounds)
+
+    classes: list[dict] = []
+    for ri, lanes in enumerate(round_lanes):
+        used: set[int] = set()
+        for lane in lanes:
+            placed = None
+            for ci, cl in enumerate(classes):
+                if ci in used:
+                    continue
+                ok = True
+                for t in lane:
+                    d = cl["perm"].get(t.src)
+                    if (d is not None and d != t.dst) or (d is None and t.dst in cl["dsts"]):
+                        ok = False
+                        break
+                if ok:
+                    placed = ci
+                    break
+            if placed is None:
+                classes.append({"perm": {}, "dsts": set(), "entries": []})
+                placed = len(classes) - 1
+            cl = classes[placed]
+            for t in lane:
+                if t.src not in cl["perm"]:
+                    cl["perm"][t.src] = t.dst
+                    cl["dsts"].add(t.dst)
+            cl["entries"].append((ri, lane))
+            used.add(placed)
+
+    out: list[LaneClass] = []
+    for cl in classes:
+        block = max(t.chunk_count for _ri, lane in cl["entries"] for t in lane)
+        combine = np.zeros((T,), np.int32)
+        send = np.zeros((T, n), np.int32)
+        recv = np.zeros((T, n), np.int32)
+        lo = np.zeros((T, n), np.int32)
+        hi = np.zeros((T, n), np.int32)
+        clip = max(K - block, 0)
+        for ri, lane in cl["entries"]:
+            combine[ri] = int(lane[0].combine)
+            for t in lane:
+                s = min(t.chunk_start, clip)
+                send[ri, t.src] = s
+                recv[ri, t.dst] = s
+                off = t.chunk_start - s
+                lo[ri, t.dst] = off
+                hi[ri, t.dst] = off + t.chunk_count
+        perm = tuple(sorted(cl["perm"].items()))
+        out.append(LaneClass(perm, combine, block, send, recv, lo, hi))
+
+    return LoweredSchedule(
+        schedule.name, schedule.kind, n, K, tuple(out), round_lanes
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ reduce_scatter), not just the paper's broadcast. Two sources combine:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import math
 import os
@@ -41,6 +42,12 @@ class Decision:
     streamed execution (``repro.comm.overlap``); ``None`` means the table
     carries no depth for this point and the overlap planner should fall
     back to the analytic :func:`cost_model.optimal_overlap_depth` sweep.
+
+    ``fused_path`` is the compiled-executor flag: ``True`` pins this point
+    to the fori_loop compiled replay (``comm.executors.execute_compiled``),
+    ``False`` to the exact unrolled replay, ``None`` (default) defers to
+    ``comm.api.apply_plan``'s round-count/zero-waste policy. Calibration can
+    record it per point the way it records ``num_chunks``.
     """
 
     algo: str
@@ -49,6 +56,7 @@ class Decision:
     predicted_s: float
     source: str  # 'analytic' | 'empirical'
     overlap_depth: int | None = None
+    fused_path: bool | None = None
 
 
 # algorithms the executor can run, with practical applicability predicates
@@ -100,6 +108,10 @@ class Tuner:
         self.allow = tuple(allow) if allow is not None else tuple(_CANDIDATES)
         # empirical table: {f"{n}:{bucket}": {"algo":..., "num_chunks":...}}
         self.table = dict(table or {})
+        # mutation counter backing the memoized fingerprint (record /
+        # record_overlap bump it; calibrate mutates through record)
+        self._version = 0
+        self._fingerprint: tuple[int, str] | None = None
 
     # -- analytic path ------------------------------------------------------
 
@@ -180,7 +192,36 @@ class Tuner:
         base = f"{n}:{self._bucket(M)}:{int(inter_pod)}"
         return base if op == "bcast" else f"{op}:{base}"
 
-    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast", overlap_depth: int | None = None) -> None:
+    def fingerprint(self) -> str:
+        """Content hash of everything a tuned decision can depend on: the
+        empirical table plus the tuner's configuration. ``record`` /
+        ``record_overlap`` / ``calibrate`` change it, so host-side plan
+        caches (``repro.comm.plan.plan_cached``) keyed on it can never
+        replay a plan built against stale calibration data.
+
+        Memoized on the mutation counter — plan_cached calls this per
+        collective per trace, and re-hashing a calibrated table every call
+        would reintroduce the O(table) host cost the cache removes. Mutate
+        the table through ``record``/``record_overlap`` (not by poking
+        ``self.table`` directly) or the memo goes stale."""
+        if self._fingerprint is not None and self._fingerprint[0] == self._version:
+            return self._fingerprint[1]
+        payload = json.dumps(
+            {
+                "hw": self.hw.name,
+                "max_chunks": self.max_chunks,
+                "knomial_k": self.knomial_k,
+                "allow": list(self.allow),
+                "table": self.table,
+            },
+            sort_keys=True,
+            default=repr,
+        )
+        fp = hashlib.sha1(payload.encode()).hexdigest()
+        self._fingerprint = (self._version, fp)
+        return fp
+
+    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast", overlap_depth: int | None = None, fused_path: bool | None = None) -> None:
         key = self._key(M, n, inter_pod, op)
         prev = self.table.get(key)
         # depth-only entries (record_overlap before any measurement) carry no
@@ -206,7 +247,20 @@ class Tuner:
                 overlap_depth = prev["overlap_depth"]
             if overlap_depth is not None:
                 entry["overlap_depth"] = int(overlap_depth)
+            if (
+                fused_path is None
+                and prev is not None
+                and "fused_path" in prev
+                and prev.get("algo") == algo
+            ):
+                # executor routing carries over exactly like overlap_depth:
+                # same-algorithm only — a flag tuned against another
+                # algorithm's round profile must not float onto this one
+                fused_path = prev["fused_path"]
+            if fused_path is not None:
+                entry["fused_path"] = bool(fused_path)
             self.table[key] = entry
+            self._version += 1
 
     def record_overlap(self, M: int, n: int, depth: int, *, inter_pod: bool = False, op: str = "allreduce") -> None:
         """Attach a tuned in-flight bucket window to the (op, M, n) table
@@ -217,6 +271,7 @@ class Tuner:
         key = self._key(M, n, inter_pod, op)
         entry = self.table.setdefault(key, {})
         entry["overlap_depth"] = max(1, int(depth))
+        self._version += 1
 
     def calibrate(
         self,
@@ -281,6 +336,7 @@ class Tuner:
                 float(hit["measured_s"]),
                 "empirical",
                 overlap_depth=depth,
+                fused_path=hit.get("fused_path"),
             )
         # depth-only entries (record_overlap with no measurement yet) keep
         # the analytic pricing and only annotate the decision with the depth
@@ -331,6 +387,8 @@ class Tuner:
                 not isinstance(entry["overlap_depth"], int) or entry["overlap_depth"] < 1
             ):
                 raise ValueError(f"{path}: entry {key!r} overlap_depth must be a positive int")
+            if "fused_path" in entry and not isinstance(entry["fused_path"], bool):
+                raise ValueError(f"{path}: entry {key!r} fused_path must be a bool")
             if set(entry) == {"overlap_depth"}:
                 continue  # depth-only entry (record_overlap, no measurement)
             if not {"algo", "num_chunks", "measured_s"} <= set(entry):

@@ -2,6 +2,8 @@
 
   chunked_copy     — pipelined HBM->VMEM->HBM staging copy (the paper's
                      CUDA-kernel-copy analogue, used by the staged bcast path)
+  combine_update   — fused add-or-select block merge for the compiled
+                     schedule executor (one VMEM pass per replay round)
   param_update     — fused model-average / scaled-add epilogue for bcast sync
   flash_attention  — blocked online-softmax attention with block skipping
 
@@ -9,6 +11,16 @@ Each kernel ships ops.py (jit'd wrapper, interpret on CPU / Mosaic on TPU)
 and ref.py (pure-jnp oracle used by the test sweeps).
 """
 from . import ops, ref
+from .combine_update import fused_combine, fused_combine_update
 from .ops import chunked_copy, flash_attention, mix, scaled_add
 
-__all__ = ["ops", "ref", "chunked_copy", "flash_attention", "mix", "scaled_add"]
+__all__ = [
+    "ops",
+    "ref",
+    "chunked_copy",
+    "fused_combine",
+    "fused_combine_update",
+    "flash_attention",
+    "mix",
+    "scaled_add",
+]

@@ -7,15 +7,20 @@ whose BlockSpec tiling makes the Mosaic pipeliner double-buffer
 HBM -> VMEM -> HBM chunk traffic. This is the staging primitive the
 host-staged broadcast path uses to move bucket chunks.
 
-Validated with ``interpret=True`` on CPU (tests sweep shapes/dtypes against
-ref.py); on TPU the same code emits the real DMA pipeline.
+The ragged tail is handled by the grid's masked final block (Pallas pads
+out-of-bounds reads and masks out-of-bounds writes), NOT by materializing a
+zero pad with ``jnp.concatenate`` — that pad was a full extra HBM copy of
+the buffer before the pipeline even started.
+
+``interpret`` defaults to the backend: the Pallas interpreter off-TPU
+(validated by the shape/dtype sweeps in tests), the real Mosaic DMA
+pipeline on TPU.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["chunked_copy"]
@@ -29,28 +34,25 @@ def _copy_kernel(src_ref, dst_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("chunk_elems", "interpret"))
-def chunked_copy(x: jax.Array, *, chunk_elems: int = 64 * 1024, interpret: bool = True) -> jax.Array:
+def chunked_copy(x: jax.Array, *, chunk_elems: int = 64 * 1024, interpret: bool | None = None) -> jax.Array:
     """Copy a 1-D buffer through VMEM in ``chunk_elems``-sized chunks.
 
-    ``x`` is padded (virtually) to a whole number of chunks; the grid walks
-    chunks and the pipeliner overlaps the k-th write with the (k+1)-th read.
+    The grid walks chunks and the pipeliner overlaps the k-th write with the
+    (k+1)-th read; a non-divisible tail rides in the final block under the
+    grid's implicit bounds mask (no pad copy is ever materialized).
     """
     assert x.ndim == 1, "chunked_copy operates on flat comm buffers"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = x.size
     chunk_elems = max(_LANE, min(chunk_elems, max(n, _LANE)))
-    pad = (-n) % chunk_elems
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
-    num_chunks = x.size // chunk_elems
-    x2 = x.reshape(num_chunks, chunk_elems)
+    num_chunks = pl.cdiv(n, chunk_elems)
 
-    out = pl.pallas_call(
+    return pl.pallas_call(
         _copy_kernel,
         grid=(num_chunks,),
-        in_specs=[pl.BlockSpec((1, chunk_elems), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((1, chunk_elems), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_chunks, chunk_elems), x.dtype),
+        in_specs=[pl.BlockSpec((chunk_elems,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((chunk_elems,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
         interpret=interpret,
-    )(x2)
-    out = out.reshape(-1)
-    return out[:n] if pad else out
+    )(x)

@@ -10,10 +10,18 @@ from typing import Optional
 import jax
 
 from .chunked_copy import chunked_copy as _chunked_copy
+from .combine_update import fused_combine as _fused_combine
 from .flash_attention import flash_attention as _flash
 from .param_update import mix as _mix, scaled_add as _scaled_add
 
-__all__ = ["on_tpu", "chunked_copy", "mix", "scaled_add", "flash_attention"]
+__all__ = [
+    "on_tpu",
+    "chunked_copy",
+    "fused_combine",
+    "mix",
+    "scaled_add",
+    "flash_attention",
+]
 
 
 def on_tpu() -> bool:
@@ -23,6 +31,11 @@ def on_tpu() -> bool:
 def chunked_copy(x, *, chunk_elems: int = 64 * 1024, interpret: Optional[bool] = None):
     interpret = (not on_tpu()) if interpret is None else interpret
     return _chunked_copy(x, chunk_elems=chunk_elems, interpret=interpret)
+
+
+def fused_combine(cur, recv, row_mode, *, interpret: Optional[bool] = None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _fused_combine(cur, recv, row_mode, interpret=interpret)
 
 
 def mix(w, u, a, *, interpret: Optional[bool] = None):

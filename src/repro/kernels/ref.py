@@ -6,11 +6,23 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["chunked_copy_ref", "mix_ref", "scaled_add_ref", "flash_attention_ref"]
+__all__ = [
+    "chunked_copy_ref",
+    "fused_combine_ref",
+    "mix_ref",
+    "scaled_add_ref",
+    "flash_attention_ref",
+]
 
 
 def chunked_copy_ref(x: jax.Array) -> jax.Array:
     return jnp.array(x, copy=True)
+
+
+def fused_combine_ref(cur, recv, row_mode):
+    """Row-mode merge: per row, mode 2 accumulates recv, mode 1 selects it,
+    mode 0 passes cur through bit-identically."""
+    return jnp.where(row_mode == 2, cur + recv, jnp.where(row_mode == 1, recv, cur))
 
 
 def mix_ref(w, u, a):

@@ -17,7 +17,11 @@ lower the overlap-engine sync_mode='overlap_allreduce' step (same plans,
 bucket-streamed schedule). Each row also carries the PLANNED footprint
 (CollectivePlan wire-bytes and predicted time for the same bucket mix,
 plus the overlap engine's barrier-vs-streamed span and idle-round
-accounting for ar:/ov: rows) next to the measured-from-HLO numbers.
+accounting for ar:/ov: rows, plus the compiled-executor accounting —
+planned_rounds / planned_lane_classes / compiled_buckets, the HLO-size
+story of DESIGN.md Sec. 9) next to the measured-from-HLO numbers. All
+rows lower with params/opt-state donated, so the schedule replays update
+gradient buckets in place.
 
     PYTHONPATH=src python -m repro.launch.hillclimb_bcast [--ranks 64]
 """
@@ -28,6 +32,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import comm
+from repro.comm import api as comm_api
 from repro.analysis.roofline import analyze_compiled
 from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import RunConfig
@@ -53,15 +58,25 @@ def planned_footprint(model, *, ranks: int, bucket_bytes: int, op: str, algo: st
     grads_like = model.param_shapes()
     spec = bucketing.plan_buckets(grads_like, bucket_bytes)
     plans = [
-        comm.plan_collective(op, M, ranks, algo=algo)
+        comm.plan_cached(op, M, ranks, algo=algo)
         for M in spec.bucket_bytes()
         if M
     ]
+    # compiled-executor accounting: rounds vs lane classes is the HLO-size
+    # story (unrolled grows with rounds, compiled with classes), and
+    # compiled_buckets counts how many buckets the tuned routing policy
+    # sends through the fori_loop replay
+    lowered = [p.lowered() for p in plans]
     out = {
         "planned_algos": sorted({p.algo for p in plans}),
         "planned_wire_bytes": sum(p.wire_bytes() for p in plans),
         "planned_time_ms": sum(p.predicted_s for p in plans) * 1e3,
         "num_buckets": len(plans),
+        "planned_rounds": sum(lw.num_rounds for lw in lowered if lw is not None),
+        "planned_lane_classes": sum(lw.num_classes for lw in lowered if lw is not None),
+        "compiled_buckets": sum(
+            comm_api._use_compiled(p, fused=True, compiled=None) for p in plans
+        ),
     }
     if overlap:
         oplan = comm.plan_overlap(

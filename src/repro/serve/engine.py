@@ -55,8 +55,11 @@ class Engine:
                 self.model.param_shapes(), mesh, fsdp=False, attn_fallback="head_dim"
             )
             if distribute:
+                # the engine owns the freshly-loaded weights here — donate
+                # them so distribution never doubles the resident footprint
                 params = distribute_weights(
-                    params, mesh, specs=pspecs, double_buffer=double_buffer
+                    params, mesh, specs=pspecs, double_buffer=double_buffer,
+                    donate=True,
                 )
             else:
                 params = jax.device_put(params, _placements(mesh, pspecs))
@@ -127,8 +130,11 @@ def plan_distribution(params, mesh, *, algo: str = "auto", tuner=None,
     plans = {}
     for ax in topology.bcast_axes(mesh):
         n = sizes[ax]
+        # plan_cached: identical (bucket size, axis) points — across buckets
+        # AND across engine restarts in one process — share one resolved
+        # plan and its pre-lowered round tables
         plans[ax] = [
-            comm.plan_collective(
+            comm.plan_cached(
                 "bcast", M, n, algo=algo, tuner=tuner,
                 inter_pod=topology.is_inter_pod(ax),
             )
@@ -140,7 +146,8 @@ def plan_distribution(params, mesh, *, algo: str = "auto", tuner=None,
 def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=None,
                        bucket_bytes: int = 4 << 20, return_plans: bool = False,
                        double_buffer: bool = False, overlap_depth: int = 2,
-                       stage_chunk: int = 64 * 1024):
+                       stage_chunk: int = 64 * 1024, donate: bool = False,
+                       compiled: bool | None = None):
     """Broadcast freshly-loaded weights across the data axes with the tuned
     library (the paper's 'training parameters exchange' applied at load).
 
@@ -158,7 +165,15 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
     ``chunked_copy`` Pallas pipeline (Sec. IV-C) while bucket k's broadcast
     is in flight — ``overlap_depth`` staging buffers deep, buckets in load
     order. Per-bucket collectives are the SAME plans either way, so the
-    distributed weights are identical."""
+    distributed weights are identical.
+
+    ``donate=True`` donates the incoming weight buffers to the broadcast
+    program (``jax.jit(..., donate_argnums)``): combined with the compiled
+    executor's in-place loop carry, distribution then never holds two full
+    copies of a bucket in device memory. The caller's ``params`` are
+    invalidated — pass it when the engine owns the freshly-loaded weights
+    (the ``Engine(distribute=True)`` path does). ``compiled`` routes the
+    per-bucket replay (None = tuned policy, see ``comm.api.apply_plan``)."""
     from ..core import bucketing
 
     bucket_spec, plans = plan_distribution(
@@ -178,7 +193,9 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
         )
 
         def run(p):
-            return comm.execute_overlap(oplan, p, stage=True, stage_chunk=stage_chunk)
+            return comm.execute_overlap(
+                oplan, p, stage=True, stage_chunk=stage_chunk, compiled=compiled
+            )
 
     else:
 
@@ -186,7 +203,7 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
             buckets = bucketing.pack_buckets(p, bucket_spec)
             for ax, ax_plans in plans.items():
                 buckets = [
-                    comm.apply_plan(plan, b, ax) if b.size else b
+                    comm.apply_plan(plan, b, ax, compiled=compiled) if b.size else b
                     for plan, b in zip(ax_plans, buckets)
                 ]
             return bucketing.unpack_buckets(buckets, bucket_spec)
@@ -198,7 +215,7 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
         out_specs=jax.tree.map(lambda _: P(), params),
         check_vma=False,
     )
-    out = jax.jit(f)(params)
+    out = jax.jit(f, donate_argnums=(0,) if donate else ())(params)
     if specs is not None:
         out = jax.device_put(out, _placements(mesh, specs))
     return (out, plans) if return_plans else out

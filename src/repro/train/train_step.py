@@ -22,6 +22,15 @@ Three data-parallel synchronization modes (DESIGN.md Sec. 4):
   ``dist.topology`` data axes (intra-pod level first, the pod level priced
   with inter-pod constants), per-bucket algorithm selected by the per-op
   tuner (reduce_then_bcast / fused_rsb / ring_allreduce windows).
+
+Per-bucket plans resolve through the host-side plan cache
+(``comm.plan.plan_cached``) — identical (op, M, n) points across steps and
+buckets share one ``CollectivePlan`` and its pre-lowered round tables — and
+``run_cfg.compiled_collectives`` routes the replay between the exact
+unrolled executor and the O(1)-HLO compiled fori_loop executor (DESIGN.md
+Sec. 9). The step is jitted with params/opt-state donated (see
+``train.trainer``), so the compiled replay updates gradient buckets in
+place.
 """
 from __future__ import annotations
 
@@ -218,6 +227,7 @@ def make_tuned_allreduce_train_step(
             tuner=tuner,
             bucket_bytes=run_cfg.bcast_bucket_bytes,
             inter_pod_axes=inter_pod_axes,
+            compiled=run_cfg.compiled_collectives,
         )
 
     return _make_comm_sync_step(
@@ -255,6 +265,7 @@ def make_overlap_allreduce_train_step(
             inter_pod_axes=inter_pod_axes,
             overlap_depth=run_cfg.overlap_depth,
             compute_s=run_cfg.overlap_compute_s,
+            compiled=run_cfg.compiled_collectives,
         )
 
     return _make_comm_sync_step(

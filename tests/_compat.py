@@ -15,7 +15,7 @@ strategy first, then fixed-seed pseudo-random draws.  Runs are identical
 across machines and invocations (no shrinking, no database, no deadlines).
 
 Only the strategy combinators this suite uses are implemented:
-``integers``, ``sampled_from``, ``booleans``, ``lists``.
+``integers``, ``sampled_from``, ``booleans``, ``floats``, ``lists``.
 """
 from __future__ import annotations
 
@@ -73,6 +73,19 @@ class _Booleans(_Strategy):
 
     def draw(self, rng):
         return bool(rng.randint(2))
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float):
+        assert lo <= hi, (lo, hi)
+        self.lo, self.hi = float(lo), float(hi)
+
+    def boundary(self):
+        vals = [self.lo, self.hi, (self.lo + self.hi) / 2.0]
+        return list(dict.fromkeys(vals))
+
+    def draw(self, rng):
+        return float(rng.uniform(self.lo, self.hi))
 
 
 class _Lists(_Strategy):
@@ -155,6 +168,7 @@ strategies = types.SimpleNamespace(
     integers=lambda min_value, max_value: _Integers(min_value, max_value),
     sampled_from=_SampledFrom,
     booleans=_Booleans,
+    floats=lambda min_value, max_value: _Floats(min_value, max_value),
     lists=lambda elem, *, min_size=0, max_size=10: _Lists(
         elem, min_size=min_size, max_size=max_size
     ),

@@ -20,24 +20,30 @@ def run(fn, xs=xs):
     @jax.jit
     def f(xs):
         g = lambda b: fn(b[0])[None]
-        return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),), out_specs=P("data"))(xs)
+        # check_vma=False: the compiled executor's Pallas merge kernel has
+        # no shard_map replication rule (same requirement as stage=True)
+        return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),),
+                             out_specs=P("data"), check_vma=False)(xs)
     return np.asarray(f(xs))
 
 for algo in ("auto", "reduce_then_bcast", "fused_rsb", "ring_allreduce", "xla_psum"):
     out = run(lambda b, a=algo: pallreduce(b, "data", algo=a))
     for r in range(8):
         np.testing.assert_allclose(out[r], want_sum, rtol=2e-5, atol=2e-5, err_msg=algo)
-# unfused (generic executor) == fused fori_loop executor
-u = run(lambda b: pallreduce(b, "data", algo="fused_rsb", num_chunks=12, fused=False))
-f = run(lambda b: pallreduce(b, "data", algo="fused_rsb", num_chunks=12, fused=True))
-np.testing.assert_allclose(u, f, rtol=1e-6)
+# unrolled (exact executor) == compiled fori_loop executor, pinned here in
+# addition to the dedicated parity sweep (this one rides the pallreduce
+# entry point end-to-end)
+u = run(lambda b: pallreduce(b, "data", algo="fused_rsb", num_chunks=12, compiled=False))
+f = run(lambda b: pallreduce(b, "data", algo="fused_rsb", num_chunks=12, compiled=True))
+np.testing.assert_array_equal(u, f)
 
 sh = jnp.asarray(rng.randn(8, 37).astype(np.float32))
 for algo in ("auto", "ring_allgather", "doubling_allgather", "xla_allgather"):
     @jax.jit
     def ag(xs, a=algo):
         g = lambda b: pallgather(b[0], "data", algo=a)[None]
-        return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),), out_specs=P("data", None))(xs)
+        return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),),
+                             out_specs=P("data", None), check_vma=False)(xs)
     out = np.asarray(ag(sh))
     for r in range(8):
         np.testing.assert_array_equal(out[r], np.asarray(sh), err_msg=algo)
@@ -71,7 +77,8 @@ for algo in ("auto", "reduce_then_bcast", "fused_rsb", "ring_allreduce"):
     @jax.jit
     def f(xs, a=algo):
         g = lambda b: pallreduce(b[0], "data", algo=a)[None]
-        return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),), out_specs=P("data"))(xs)
+        return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),),
+                             out_specs=P("data"), check_vma=False)(xs)
     out = np.asarray(f(xs))
     for r in range(6):
         np.testing.assert_allclose(out[r], want, rtol=2e-5, atol=2e-5, err_msg=algo)
@@ -79,7 +86,8 @@ sh = jnp.asarray(rng.randn(6, 19).astype(np.float32))
 @jax.jit
 def ag(xs):
     g = lambda b: pallgather(b[0], "data", algo="ring_allgather")[None]
-    return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),), out_specs=P("data", None))(xs)
+    return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),),
+                         out_specs=P("data", None), check_vma=False)(xs)
 out = np.asarray(ag(sh))
 for r in range(6):
     np.testing.assert_array_equal(out[r], np.asarray(sh))
@@ -285,6 +293,143 @@ for depth in (1, 2, 3):
                                       err_msg=f"{k}@depth{depth}")
 print("PASS")
 """
+    )
+
+
+def _compiled_parity_snippet(n: int) -> str:
+    return f"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comm import plan_collective, apply_plan
+
+n = {n}
+mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.RandomState(0)
+
+def run(fn, xs, out_spec=P("data")):
+    @jax.jit
+    def f(xs):
+        g = lambda b: fn(b[0])[None]
+        return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),),
+                             out_specs=out_spec, check_vma=False)(xs)
+    return np.asarray(f(xs))
+
+# (op, algo, plan kwargs) x (divisible, ragged) element counts. Both
+# executors replay the SAME plan; results must be bit-identical.
+cases = [
+    ("bcast", "pipelined_chain", {{"num_chunks": 12}}),
+    ("bcast", "bidir_chain", {{"num_chunks": 12}}),
+    ("bcast", "binomial", {{}}),
+    ("reduce", "pipelined_reduce_chain", {{"num_chunks": 5}}),
+    ("reduce", "binomial_reduce", {{}}),
+    ("allreduce", "fused_rsb", {{"num_chunks": 12}}),
+    ("allreduce", "ring_allreduce", {{}}),
+    ("allreduce", "reduce_then_bcast", {{}}),
+    ("reduce_scatter", "ring_reduce_scatter", {{}}),
+]
+for elems in (8 * 12, 1013):
+    for op, algo, kw in cases:
+        xs = jnp.asarray(rng.randn(n, elems).astype(np.float32))
+        plan = plan_collective(op, elems * 4, n, algo=algo, **kw)
+        u = run(lambda b: apply_plan(plan, b, "data", compiled=False), xs)
+        c = run(lambda b: apply_plan(plan, b, "data", compiled=True), xs)
+        np.testing.assert_array_equal(u, c, err_msg=f"{{op}}/{{algo}}/{{elems}}")
+        # the unrolled executor is the long-standing reference; pin the
+        # compiled result to the op's semantics too via rank 0
+        if op == "allreduce":
+            np.testing.assert_allclose(c[0], np.asarray(xs).sum(0),
+                                       rtol=2e-5, atol=2e-5, err_msg=algo)
+        elif op == "bcast":
+            np.testing.assert_array_equal(c[1], np.asarray(xs[0]), err_msg=algo)
+
+    # allgather stacks (n, shard): shard shapes per rank
+    sh = jnp.asarray(rng.randn(n, 37).astype(np.float32))
+    algos = ["ring_allgather"] + (["doubling_allgather"] if n & (n - 1) == 0 else [])
+    for algo in algos:
+        plan = plan_collective("allgather", n * 37 * 4, n, algo=algo)
+        u = run(lambda b: apply_plan(plan, b, "data", compiled=False)[None][0],
+                sh, out_spec=P("data", None))
+        c = run(lambda b: apply_plan(plan, b, "data", compiled=True)[None][0],
+                sh, out_spec=P("data", None))
+        np.testing.assert_array_equal(u, c, err_msg=algo)
+        for r in range(n):
+            np.testing.assert_array_equal(c[r], np.asarray(sh), err_msg=algo)
+print("PASS")
+"""
+
+
+def test_compiled_executor_parity_pow2(dist):
+    """ISSUE acceptance: the generic compiled executor (fori_loop over the
+    lowered round tables + fused Pallas combine) is bit-identical to the
+    unrolled execute_collective for every op on 8 ranks, divisible and
+    ragged sizes."""
+    dist(_compiled_parity_snippet(8), timeout=580)
+
+
+def test_compiled_executor_parity_non_pow2(dist):
+    """Same sweep on 6 ranks (no power of two anywhere)."""
+    dist(_compiled_parity_snippet(6), devices=6, timeout=580)
+
+
+def test_compiled_path_engages_and_matches_in_consumers(dist):
+    """The tuned routing policy + explicit compiled pins inside the consumer
+    entry points: pallreduce/pbcast with compiled=True equal their unrolled
+    twins on awkward sizes, and a huge-round plan auto-routes to the
+    compiled executor (old fused-executor territory) while still matching."""
+    dist(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comm import pallreduce, pbcast, plan_collective
+from repro.comm.api import _use_compiled
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.RandomState(5)
+xs = jnp.asarray(rng.randn(8, 1013).astype(np.float32))
+
+def run(fn):
+    @jax.jit
+    def f(xs):
+        g = lambda b: fn(b[0])[None]
+        return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),),
+                             out_specs=P("data"), check_vma=False)(xs)
+    return np.asarray(f(xs))
+
+want = np.asarray(xs).sum(0)
+for algo in ("fused_rsb", "ring_allreduce"):
+    u = run(lambda b, a=algo: pallreduce(b, "data", algo=a, compiled=False))
+    c = run(lambda b, a=algo: pallreduce(b, "data", algo=a, compiled=True))
+    np.testing.assert_array_equal(u, c, err_msg=algo)
+    np.testing.assert_allclose(c[0], want, rtol=2e-5, atol=2e-5, err_msg=algo)
+u = run(lambda b: pbcast(b, "data", algo="pipelined_chain", num_chunks=9,
+                         compiled=False))
+c = run(lambda b: pbcast(b, "data", algo="pipelined_chain", num_chunks=9,
+                         compiled=True))
+np.testing.assert_array_equal(u, c)
+
+# auto policy: >256-round chain plans route compiled (the deleted
+# hand-written fused executors' territory); ring allgather is zero-waste
+# and routes compiled at its small round count too
+big = plan_collective("allreduce", 4096 * 4, 8, algo="fused_rsb", num_chunks=300)
+assert big.schedule.num_rounds > 256
+assert _use_compiled(big, fused=True, compiled=None)
+assert not _use_compiled(big, fused=False, compiled=None)
+ring = plan_collective("allgather", 8 * 64 * 4, 8, algo="ring_allgather")
+assert not _use_compiled(ring, fused=True, compiled=None)  # 7 rounds: unrolled
+# ring_allreduce is zero-waste (both phases on one class), so it keeps the
+# old always-fused behavior from 2(n-1) >= 8 rounds on
+ring_ar = plan_collective("allreduce", 4096 * 4, 8, algo="ring_allreduce")
+assert _use_compiled(ring_ar, fused=True, compiled=None)
+small = plan_collective("allreduce", 4096 * 4, 8, algo="fused_rsb", num_chunks=8)
+assert not _use_compiled(small, fused=True, compiled=None)
+
+u = run(lambda b: pallreduce(b, "data", algo="fused_rsb", num_chunks=300,
+                             compiled=False))
+c = run(lambda b: pallreduce(b, "data", algo="fused_rsb", num_chunks=300))
+np.testing.assert_array_equal(u, c)
+print("PASS")
+""",
+        timeout=580,
     )
 
 

@@ -273,3 +273,94 @@ def test_bench_loader_rejects_bad_rows(tmp_path):
     p.write_text(json.dumps({"not": "a list"}))
     with pytest.raises(TableSchemaError, match="array"):
         load_bench(str(p))
+
+
+# ---------------------------------------------------------------------------
+# host-side plan cache (comm.plan.plan_cached)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hits_and_keying():
+    from repro.comm import plan_cache_clear, plan_cache_info, plan_cached
+
+    plan_cache_clear()
+    t = Tuner()
+    a = plan_cached("allreduce", 1 << 20, 8, tuner=t)
+    b = plan_cached("allreduce", 1 << 20, 8, tuner=t)
+    assert a is b  # identical point -> the SAME frozen plan object
+    info = plan_cache_info()
+    assert info["hits"] == 1 and info["misses"] == 1
+    # any key component splits the entry
+    assert plan_cached("allreduce", 1 << 20, 8, tuner=t, inter_pod=True) is not a
+    assert plan_cached("allreduce", 1 << 20, 6, tuner=t) is not a
+    assert plan_cached("reduce", 1 << 20, 8, tuner=t) is not a
+    assert plan_cached("allreduce", 1 << 20, 8, tuner=t, algo="fused_rsb") is not a
+    # two tuners with EQUAL content share entries (fingerprint keying, not id)
+    assert plan_cached("allreduce", 1 << 20, 8, tuner=Tuner()) is a
+
+
+def test_plan_cache_invalidated_by_tuner_record():
+    """Satellite (ISSUE): Tuner.record of a new empirical row must change
+    the cache-key fingerprint — stale plans are never replayed after
+    calibration."""
+    from repro.comm import plan_cache_clear, plan_cached
+
+    plan_cache_clear()
+    t = Tuner()
+    M, n = 1 << 20, 8
+    before = plan_cached("allreduce", M, n, tuner=t)
+    assert before.decision.source == "analytic"
+    fp0 = t.fingerprint()
+    t.record(M, n, "ring_allreduce", n, 1e-4, op="allreduce")
+    assert t.fingerprint() != fp0
+    after = plan_cached("allreduce", M, n, tuner=t)
+    assert after is not before
+    assert after.decision.source == "empirical"
+    assert after.algo == "ring_allreduce"
+    # re-querying the calibrated point hits the new entry, not the stale one
+    assert plan_cached("allreduce", M, n, tuner=t) is after
+    # record_overlap (a depth-only row) must also invalidate
+    fp1 = t.fingerprint()
+    t.record_overlap(M, n, 3, op="allreduce")
+    assert t.fingerprint() != fp1
+    deeper = plan_cached("allreduce", M, n, tuner=t)
+    assert deeper is not after and deeper.decision.overlap_depth == 3
+
+
+def test_plan_cache_bounded():
+    from repro.comm import plan_cache_clear, plan_cache_info, plan_cached
+    from repro.comm.plan import _PLAN_CACHE_MAX
+
+    plan_cache_clear()
+    t = Tuner()
+    for i in range(_PLAN_CACHE_MAX + 40):
+        plan_cached("bcast", 1024 + i, 4, tuner=t)
+    assert plan_cache_info()["size"] <= _PLAN_CACHE_MAX
+
+
+def test_decision_fused_path_roundtrip(tmp_path):
+    """The tuned fused-path flag rides the empirical table: record ->
+    select -> save/load all preserve it, and apply_plan's routing honors it
+    over the round-count policy."""
+    from repro.comm.api import _use_compiled
+
+    t = Tuner()
+    t.record(1 << 20, 8, "fused_rsb", 16, 1e-4, op="allreduce", fused_path=True)
+    dec = t.select(1 << 20, 8, op="allreduce")
+    assert dec.fused_path is True
+    p = tmp_path / "table.json"
+    t.save(str(p))
+    dec2 = Tuner.load(str(p)).select(1 << 20, 8, op="allreduce")
+    assert dec2.fused_path is True
+
+    plan = plan_collective("allreduce", 1 << 20, 8, tuner=t)
+    assert plan.schedule.num_rounds <= 256  # policy alone would say unrolled
+    assert _use_compiled(plan, fused=True, compiled=None)
+    assert not _use_compiled(plan, fused=True, compiled=False)
+
+    bad = {"hw": "tpu-v5e", "max_chunks": 64,
+           "table": {"allreduce:8:20:0": {"algo": "fused_rsb", "num_chunks": 4,
+                                          "measured_s": 1.0, "fused_path": "yes"}}}
+    p.write_text(json.dumps(bad))
+    with pytest.raises(ValueError, match="fused_path"):
+        Tuner.load(str(p))
