@@ -7,6 +7,7 @@
   allreduce: gradient-sync strategies + per-op empirical table (repro.comm)
   overlap: bucket-streamed sync, planned vs simulated   (comm.overlap)
   compile: unrolled-vs-compiled executor program size   (comm.executors)
+  ragged: allgatherv/alltoallv skew-regime sweep        (comm ragged ops)
 
 Prints ``name,us_per_call,derived`` CSV; also writes experiments/bench.json
 (and the tuner/allreduce suites their experiments/*_table.json artifacts —
@@ -39,6 +40,7 @@ def main() -> None:
         bench_internode,
         bench_intranode,
         bench_overlap,
+        bench_ragged,
         bench_tuner_table,
         bench_vgg_cntk,
     )
@@ -48,6 +50,7 @@ def main() -> None:
         "allreduce": bench_allreduce.rows,
         "overlap": bench_overlap.rows,
         "compile": bench_compile.rows,
+        "ragged": bench_ragged.rows,
         "fig1": bench_intranode.rows,
         "fig2": bench_internode.rows,
         "fig3": bench_vgg_cntk.rows,

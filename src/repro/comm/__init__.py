@@ -23,10 +23,12 @@ from .api import (
     apply_plan,
     hierarchical_allreduce_axes,
     pallgather,
+    pallgatherv,
     pallreduce,
     pallreduce_tree,
     pbcast,
     pbcast_tree,
+    palltoallv,
     preduce,
     preduce_scatter,
 )
@@ -77,6 +79,8 @@ __all__ = [
     "preduce_scatter",
     "pallreduce",
     "pallgather",
+    "pallgatherv",
+    "palltoallv",
     "pallreduce_tree",
     "hierarchical_allreduce_axes",
     "OverlapPlan",

@@ -15,12 +15,14 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from ..core import algorithms, bucketing
 from ..core.tuner import Tuner
 from .executors import execute_collective, execute_compiled
 from .plan import ONE_SHOT, CollectivePlan, plan_cached
+from .schedules import alltoallv_matrix
 
 __all__ = [
     "apply_plan",
@@ -29,6 +31,8 @@ __all__ = [
     "preduce",
     "pallreduce",
     "pallgather",
+    "pallgatherv",
+    "palltoallv",
     "preduce_scatter",
     "pallreduce_tree",
     "hierarchical_allreduce_axes",
@@ -116,6 +120,117 @@ def _unchunked(buf: jax.Array, pad: int, shape, dtype):
 
 
 # ---------------------------------------------------------------------------
+# ragged layout tables (host-side numpy, lifted to traced constants)
+#
+# The ragged schedules move rows of one global (total_rows, elems) buffer
+# whose layout is fixed by the size vector: allgatherv concatenates the
+# per-rank segments in rank order; alltoallv lays the n^2 blocks out
+# row-major by (src, dst). The SPMD entry points scatter each rank's local
+# shard into that global frame, replay the schedule, and gather the rank's
+# result back out — all index arithmetic happens here on the host, so the
+# traced program only sees constant gather tables and one `where` mask.
+# ---------------------------------------------------------------------------
+
+
+def _gatherv_tables(sizes, n: int):
+    """allgatherv scatter layout: global row ``g`` is owned by rank
+    ``src_of[g]`` and lives at row ``loc[g]`` of that rank's local shard."""
+    sz = np.asarray(sizes, dtype=np.int64)
+    off = np.concatenate([[0], np.cumsum(sz)])
+    src_of = np.repeat(np.arange(n, dtype=np.int64), sz)
+    loc = np.arange(int(off[-1]), dtype=np.int64) - off[src_of]
+    return src_of, loc
+
+
+def _a2av_tables(m: np.ndarray, n: int, *, in_padded: bool, out_padded: bool,
+                 in_rows: int):
+    """alltoallv scatter/gather layout for block matrix ``m`` (rows rank s
+    sends to rank d). Returns host arrays:
+
+    - ``src_of[g]``/``loc[g]``: global row ``g`` (row-major (s, d) blocks)
+      is owned by rank ``src_of[g]`` at local row ``loc[g]``. For compact
+      inputs ``loc`` indexes the destination-major concatenation; for padded
+      inputs it indexes the flattened ``(n, in_rows)`` block layout.
+    - ``gidx``/``gvalid``: per-rank output gather table. Row ``i`` of rank
+      r's output is global row ``gidx[r, i]`` where ``gvalid[r, i]``, zero
+      elsewhere. Compact outputs are the source-major concatenation (width
+      ``max_r recv_r``); padded outputs are ``(n, bmax)`` blocks with each
+      incoming block at a valid prefix (``bmax = m.max()``).
+    """
+    total = int(m.sum())
+    boff = np.concatenate([[0], np.cumsum(m.reshape(-1))])
+    bmax = int(m.max())
+    recv = m.sum(axis=0)
+    in_off = np.concatenate(
+        [np.zeros((n, 1), np.int64), np.cumsum(m, axis=1)], axis=1
+    )
+    src_of = np.repeat(np.arange(n * n, dtype=np.int64) // n, m.reshape(-1))
+    loc = np.zeros(total, dtype=np.int64)
+    for s in range(n):
+        for d in range(n):
+            b = s * n + d
+            j = np.arange(int(m[s, d]), dtype=np.int64)
+            loc[boff[b]:boff[b + 1]] = (d * in_rows + j) if in_padded else (in_off[s, d] + j)
+    out_rows = n * bmax if out_padded else max(int(recv.max()), 1)
+    gidx = np.zeros((n, out_rows), dtype=np.int64)
+    gvalid = np.zeros((n, out_rows), dtype=bool)
+    for r in range(n):
+        pos = 0
+        for s in range(n):
+            b = s * n + r
+            h = int(m[s, r])
+            lo = s * bmax if out_padded else pos
+            gidx[r, lo:lo + h] = np.arange(boff[b], boff[b] + h)
+            gvalid[r, lo:lo + h] = True
+            pos += h
+    return src_of, loc, gidx, gvalid, bmax
+
+
+def _ragged_scatter(x2d: jax.Array, src_of, loc, axis_name) -> jax.Array:
+    """Build the global (total_rows, elems) buffer: this rank's rows in
+    place, zeros elsewhere (the executors' pre-condition for ragged ops)."""
+    rank = lax.axis_index(axis_name)
+    owned = jnp.asarray(src_of)[:, None] == rank
+    return jnp.where(owned, x2d[jnp.asarray(loc)], jnp.zeros((), x2d.dtype))
+
+
+def _run_allgatherv(plan: CollectivePlan, x: jax.Array, axis_name, run):
+    sz = plan.sizes
+    total = sum(sz)
+    x2d = jnp.reshape(x, (x.shape[0], -1))
+    src_of, loc = _gatherv_tables(sz, plan.n)
+    out = run(plan.schedule, _ragged_scatter(x2d, src_of, loc, axis_name), axis_name)
+    return out.reshape((total,) + x.shape[1:])
+
+
+def _run_alltoallv(plan: CollectivePlan, x: jax.Array, axis_name, run, *,
+                   in_padded: bool, out_padded: bool):
+    n = plan.n
+    m = np.asarray(plan.sizes, dtype=np.int64).reshape(n, n)
+    elem = x.shape[2:] if in_padded else x.shape[1:]
+    if in_padded and x.shape[0] != n:
+        raise ValueError(f"in_padded alltoallv expects a (n={n}, bmax, ...) "
+                         f"block layout, got leading dim {x.shape[0]}")
+    in_rows = x.shape[1] if in_padded else x.shape[0]
+    src_of, loc, gidx, gvalid, bmax = _a2av_tables(
+        m, n, in_padded=in_padded, out_padded=out_padded, in_rows=int(in_rows))
+    need = bmax if in_padded else int(m.sum(axis=1).max())
+    if in_rows < need:
+        raise ValueError(
+            f"alltoallv input has {in_rows} rows per "
+            f"{'block' if in_padded else 'rank'}, size matrix needs {need}")
+    x2d = jnp.reshape(x, (-1, math.prod(elem) if elem else 1))
+    out = run(plan.schedule, _ragged_scatter(x2d, src_of, loc, axis_name), axis_name)
+    rank = lax.axis_index(axis_name)
+    idx = jnp.asarray(gidx)[rank]
+    valid = jnp.asarray(gvalid)[rank]
+    picked = jnp.where(valid[:, None], out[idx], jnp.zeros((), out.dtype))
+    if out_padded:
+        return picked.reshape((n, bmax) + elem)
+    return picked.reshape((picked.shape[0],) + elem)
+
+
+# ---------------------------------------------------------------------------
 # plan execution (consumers that pre-build CollectivePlans host-side —
 # serving weight distribution, hillclimb — replay them here verbatim)
 # ---------------------------------------------------------------------------
@@ -134,7 +249,11 @@ def apply_plan(
 
     bcast/reduce/allreduce take and return the full buffer; allgather takes
     the per-rank shard and returns the ``(n, *shard)`` stack; reduce_scatter
-    takes the full buffer and returns the rank's flat shard.
+    takes the full buffer and returns the rank's flat shard. The ragged ops
+    use the compact conventions: allgatherv takes the valid-prefix row shard
+    and returns the ``(sum(sizes), ...)`` concatenation; alltoallv takes the
+    destination-major compact rows and returns the source-major compact rows
+    (use :func:`palltoallv` for the padded block layouts).
 
     Executor routing (see :func:`_use_compiled`): ``compiled=True`` forces
     the fori_loop compiled replay (``execute_compiled`` — O(1) HLO in chunk
@@ -145,6 +264,10 @@ def apply_plan(
     and the fused kernel's aliasing update the buffer in place.
     """
     if plan.algo == "noop":
+        if plan.op in ("allgatherv", "alltoallv"):
+            # n == 1: the rank's valid prefix IS the result (alltoallv's
+            # 1x1 block matrix degenerates to the same slice)
+            return x[: plan.sizes[0]]
         return x if plan.op != "allgather" else x[None]
     if plan.algo == "xla_psum":
         if plan.op == "bcast":
@@ -156,6 +279,11 @@ def apply_plan(
         return lax.all_gather(x, axis_name, axis=0)
     sched = plan.schedule
     run = execute_compiled if _use_compiled(plan, fused=fused, compiled=compiled) else execute_collective
+    if plan.op == "allgatherv":
+        return _run_allgatherv(plan, x, axis_name, run)
+    if plan.op == "alltoallv":
+        return _run_alltoallv(plan, x, axis_name, run,
+                              in_padded=False, out_padded=False)
     if plan.op == "allgather":
         flat = jnp.ravel(x)
         buf = jnp.zeros((plan.n, flat.size), flat.dtype)
@@ -351,6 +479,122 @@ def preduce_scatter(
     if plan.algo == "noop":
         return flat
     return apply_plan(plan, x, axis_name, compiled=compiled)
+
+
+# ---------------------------------------------------------------------------
+# ragged collectives (allgatherv / alltoallv — MPI_Allgatherv/MPI_Alltoallv
+# analogues on the schedule IR; the MoE expert-dispatch transport)
+# ---------------------------------------------------------------------------
+
+
+def pallgatherv(
+    x: jax.Array,
+    axis_name,
+    *,
+    sizes: Sequence[int],
+    algo: str = "auto",
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+    fused: bool = True,
+    compiled: bool | None = None,
+) -> jax.Array:
+    """Ragged all-gather: rank ``r`` contributes the first ``sizes[r]`` rows
+    of ``x`` (rows beyond the valid prefix are ignored) and every rank
+    receives the ``(sum(sizes), *x.shape[1:])`` concatenation in rank order.
+
+    ``x`` must have the same static shape on every rank with leading dim
+    >= ``max(sizes)`` (SPMD). Zero-sized ranks are fine — they contribute
+    nothing but still receive the full result. ``algo``: 'auto',
+    'ring_allgatherv', or 'doubling_allgatherv' (power-of-two n); 'auto'
+    routes through the skew-aware tuner (``Tuner.select(..., sizes=)``).
+    """
+    x = jnp.asarray(x)
+    n = lax.axis_size(axis_name)
+    sz = tuple(int(s) for s in sizes)
+    if len(sz) != n:
+        raise ValueError(f"allgatherv sizes has {len(sz)} entries for axis size {n}")
+    if any(s < 0 for s in sz) or sum(sz) == 0:
+        raise ValueError(f"allgatherv sizes must be non-negative and non-empty: {sz}")
+    if x.ndim < 1 or x.shape[0] < max(sz):
+        raise ValueError(
+            f"allgatherv input has {x.shape[0] if x.ndim else 0} rows, "
+            f"size vector needs max(sizes)={max(sz)}")
+    total = sum(sz)
+    if n == 1:
+        return x[: sz[0]]
+    elems = math.prod(x.shape[1:]) if x.ndim > 1 else 1
+    if elems == 0:
+        return jnp.zeros((total,) + x.shape[1:], x.dtype)
+    M = total * elems * x.dtype.itemsize
+    plan = plan_cached(
+        "allgatherv", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
+        sizes=sz,
+    )
+    return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled)
+
+
+def palltoallv(
+    x: jax.Array,
+    axis_name,
+    *,
+    sizes,
+    algo: str = "auto",
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+    in_padded: bool = False,
+    out_padded: bool = False,
+    fused: bool = True,
+    compiled: bool | None = None,
+) -> jax.Array:
+    """Ragged all-to-all: ``sizes`` gives the block matrix ``m[s][d]`` (rows
+    rank ``s`` sends to rank ``d``) as an n x n nested sequence, a flat
+    row-major n^2 vector, or a length-n per-destination vector (every source
+    sends the same counts). Rank ``r`` sends block ``m[r][d]`` to each
+    ``d`` and receives block ``m[s][r]`` from each ``s``.
+
+    Layouts (``elem = x.shape[1:]`` compact, ``x.shape[2:]`` padded):
+
+    - compact in (default): ``x`` is the destination-major concatenation —
+      the first ``sum_d m[r][d]`` rows are blocks for d=0..n-1 back-to-back;
+      leading dim >= ``max_r sum_d m[r][d]`` (static, shared by all ranks).
+    - padded in (``in_padded=True``): ``x`` is ``(n, bmax_in, *elem)`` with
+      the block for destination ``d`` at ``x[d, :m[r][d]]``.
+    - compact out (default): source-major concatenation, shape
+      ``(max_r sum_s m[s][r], *elem)``, zero beyond the rank's valid prefix.
+    - padded out (``out_padded=True``): ``(n, max(m), *elem)`` with the
+      block from source ``s`` at ``out[s, :m[s][r]]``, zeros elsewhere.
+
+    The padded layouts keep per-rank shapes static when block heights vary
+    per rank — the MoE expert-dispatch contract. ``algo``: 'auto',
+    'pairwise_alltoallv', or 'ring_alltoallv' (store-and-forward).
+    """
+    x = jnp.asarray(x)
+    n = lax.axis_size(axis_name)
+    m = alltoallv_matrix(sizes, n)
+    flat = tuple(v for row in m for v in row)
+    total = sum(flat)
+    if total == 0:
+        raise ValueError("alltoallv size matrix is all zeros")
+    elem = x.shape[2:] if in_padded else x.shape[1:]
+    elems = math.prod(elem) if elem else 1
+    if n == 1:
+        c = m[0][0]
+        if in_padded:
+            return x[:, :c] if out_padded else x[0, :c]
+        return x[:c][None] if out_padded else x[:c]
+    if elems == 0:
+        bmax = max(flat)
+        rmax = max(sum(m[s][r] for s in range(n)) for r in range(n))
+        shape = ((n, bmax) + elem) if out_padded else ((rmax,) + elem)
+        return jnp.zeros(shape, x.dtype)
+    M = total * elems * x.dtype.itemsize
+    plan = plan_cached(
+        "alltoallv", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
+        sizes=flat,
+    )
+    run = execute_compiled if _use_compiled(plan, fused=fused, compiled=compiled) else execute_collective
+    return _run_alltoallv(plan, x, axis_name, run,
+                          in_padded=in_padded, out_padded=out_padded)
 
 
 # ---------------------------------------------------------------------------

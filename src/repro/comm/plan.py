@@ -14,7 +14,7 @@ from collections import OrderedDict
 
 from ..core import cost_model
 from ..core.schedules import ALGORITHMS, LoweredSchedule, Schedule, build, lower_schedule
-from ..core.tuner import OPS, Decision, Tuner, default_tuner
+from ..core.tuner import OPS, RAGGED_OPS, Decision, Tuner, default_tuner
 from . import schedules as comm_schedules
 
 __all__ = [
@@ -48,6 +48,29 @@ _N_CHUNK_ALGOS = {
 
 _CHAIN_ALGOS = {"pipelined_chain", "bidir_chain", "pipelined_reduce_chain", "fused_rsb"}
 
+# ragged algos: chunking is pinned by the size vector, not swept
+_RAGGED_ALGOS = {
+    "ring_allgatherv", "doubling_allgatherv", "pairwise_alltoallv", "ring_alltoallv",
+}
+
+
+def _norm_sizes(op: str, sizes, n: int) -> tuple[int, ...] | None:
+    """Canonical size vector for cache keys and tuner pricing: a flat tuple
+    of non-negative ints (alltoallv matrices flatten row-major)."""
+    if sizes is None:
+        return None
+    if op not in RAGGED_OPS:
+        raise ValueError(f"sizes= is only meaningful for {RAGGED_OPS}, not {op!r}")
+    if op == "alltoallv":
+        m = comm_schedules.alltoallv_matrix(sizes, n)
+        return tuple(v for row in m for v in row)
+    flat = tuple(int(s) for s in sizes)
+    if len(flat) != n:
+        raise ValueError(f"allgatherv sizes must have n={n} entries, got {len(flat)}")
+    if any(s < 0 for s in flat):
+        raise ValueError(f"sizes must be non-negative: {flat}")
+    return flat
+
 
 @dataclasses.dataclass(frozen=True)
 class CollectivePlan:
@@ -60,6 +83,10 @@ class CollectivePlan:
     inter_pod: bool
     decision: Decision
     schedule: Schedule | None   # None for noop and the one-shot baselines
+    # ragged ops: the canonical row-count vector (per rank for allgatherv,
+    # per (src, dst) block row-major for alltoallv); None for uniform ops.
+    # M == sum(sizes) * row_bytes, so wire accounting stays exact.
+    sizes: tuple[int, ...] | None = None
 
     @property
     def algo(self) -> str:
@@ -112,11 +139,13 @@ def decide(
     num_chunks: int | None = None,
     tuner: Tuner | None = None,
     inter_pod: bool = False,
+    sizes=None,
 ) -> Decision:
     """Resolve (op, M, n) to a Decision. ``algo='auto'`` consults the tuner;
     a manual algo gets analytic chunking AND an analytic ``predicted_s`` (so
     manual and auto decisions are comparable in reports — the old bcast path
-    returned NaN here)."""
+    returned NaN here). Ragged ops take their row-count vector via
+    ``sizes`` (see :meth:`Tuner.select`)."""
     if op not in OPS:
         raise ValueError(f"unknown collective op {op!r}; have {OPS}")
     if algo in ONE_SHOT and op not in _ONE_SHOT_OPS[algo]:
@@ -124,13 +153,16 @@ def decide(
             f"one-shot {algo!r} cannot implement op {op!r} (valid for {_ONE_SHOT_OPS[algo]})"
         )
     t = tuner or default_tuner()
+    sizes = _norm_sizes(op, sizes, n)
     if n <= 1:
         return Decision("noop", 1, max(M, 1), 0.0, "analytic")
     if algo == "auto":
-        return t.select(M, n, op=op, inter_pod=inter_pod)
+        return t.select(M, n, op=op, inter_pod=inter_pod, sizes=sizes)
     B = t.hw.path_bw(inter_pod)
     if num_chunks is None:
-        if algo in ("pipelined_chain", "bidir_chain", "pipelined_reduce_chain"):
+        if algo in _RAGGED_ALGOS:
+            num_chunks = max(sum(sizes), 1) if sizes else n
+        elif algo in ("pipelined_chain", "bidir_chain", "pipelined_reduce_chain"):
             # per-algorithm analytic chunking (a generic fallback of 8 chunks
             # made a 64-rank chain carry 5x extra fill/drain garbage —
             # EXPERIMENTS.md §Perf pair 3)
@@ -153,6 +185,9 @@ def decide(
         if algo == "reduce_then_bcast":
             inner = t.select(M, n, op="bcast", inter_pod=inter_pod)
             kw = {"t_bcast": inner.predicted_s}
+        elif algo in _RAGGED_ALGOS and sizes is not None and sum(sizes) > 0:
+            row_bytes = M / sum(sizes)
+            kw = {"sizes": [s * row_bytes for s in sizes]}
         predicted = cost_model.cost(algo, M, n, t.hw, inter_pod=inter_pod, **kw)
     else:
         predicted = float("nan")  # one-shot baselines have no Eq. 1-6 model
@@ -169,12 +204,15 @@ def plan_collective(
     num_chunks: int | None = None,
     tuner: Tuner | None = None,
     inter_pod: bool = False,
+    sizes=None,
 ) -> CollectivePlan:
     """Decide + build the executable schedule for one collective."""
-    dec = decide(op, M, n, algo=algo, num_chunks=num_chunks, tuner=tuner, inter_pod=inter_pod)
+    sizes = _norm_sizes(op, sizes, n)
+    dec = decide(op, M, n, algo=algo, num_chunks=num_chunks, tuner=tuner,
+                 inter_pod=inter_pod, sizes=sizes)
     t = tuner or default_tuner()
     if dec.algo == "noop" or dec.algo in ONE_SHOT:
-        return CollectivePlan(op, M, n, root, inter_pod, dec, None)
+        return CollectivePlan(op, M, n, root, inter_pod, dec, None, sizes)
     if op == "bcast":
         kw = {}
         if dec.algo in ("pipelined_chain", "bidir_chain"):
@@ -196,11 +234,14 @@ def plan_collective(
         dec = dataclasses.replace(dec, num_chunks=sched.num_chunks,
                                   chunk_bytes=math.ceil(M / max(1, sched.num_chunks)))
     else:
-        sched = comm_schedules.build_op(op, dec.algo, n, root, num_chunks=dec.num_chunks)
+        sched = comm_schedules.build_op(op, dec.algo, n, root,
+                                        num_chunks=dec.num_chunks, sizes=sizes)
         if sched.num_chunks != dec.num_chunks:
             dec = dataclasses.replace(dec, num_chunks=sched.num_chunks,
                                       chunk_bytes=math.ceil(M / max(1, sched.num_chunks)))
-    return CollectivePlan(op, M, n, root, inter_pod, dec, sched)
+        if op in RAGGED_OPS:
+            sizes = sched.sizes  # the builder's canonical (flattened) vector
+    return CollectivePlan(op, M, n, root, inter_pod, dec, sched, sizes)
 
 
 # ---------------------------------------------------------------------------
@@ -229,15 +270,19 @@ def plan_cached(
     num_chunks: int | None = None,
     tuner: Tuner | None = None,
     inter_pod: bool = False,
+    sizes=None,
 ) -> CollectivePlan:
     """LRU-cached :func:`plan_collective`. Key: (op, M, n, root, algo,
-    num_chunks, inter_pod, tuner fingerprint). The buffer dtype is already
-    folded into ``M`` (a byte count), so same-point calls from different
-    dtypes correctly share one plan. Plans are frozen and their schedules
-    immutable, so sharing the object across callers (and across traced
-    programs) is safe; the pre-lowered round tables ride along via
-    ``CollectivePlan.lowered()``'s own cache."""
+    num_chunks, inter_pod, sizes vector, tuner fingerprint). The buffer
+    dtype is already folded into ``M`` (a byte count), so same-point calls
+    from different dtypes correctly share one plan; ragged plans for
+    different size vectors never collide (the canonical flat vector is in
+    the key). Plans are frozen and their schedules immutable, so sharing
+    the object across callers (and across traced programs) is safe; the
+    pre-lowered round tables ride along via ``CollectivePlan.lowered()``'s
+    own cache."""
     t = tuner or default_tuner()
+    sizes = _norm_sizes(op, sizes, n)
     key = (
         op,
         int(M),
@@ -246,6 +291,7 @@ def plan_cached(
         algo,
         None if num_chunks is None else int(num_chunks),
         bool(inter_pod),
+        sizes,
         t.fingerprint(),
     )
     plan = _PLAN_CACHE.get(key)
@@ -256,7 +302,7 @@ def plan_cached(
     _PLAN_CACHE_STATS["misses"] += 1
     plan = plan_collective(
         op, M, n, root=root, algo=algo, num_chunks=num_chunks, tuner=t,
-        inter_pod=inter_pod,
+        inter_pod=inter_pod, sizes=sizes,
     )
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
@@ -273,11 +319,42 @@ def plan_cache_clear() -> None:
     _PLAN_CACHE_STATS.update(hits=0, misses=0)
 
 
-def expected_wire_bytes(op: str, algo: str, M: int, n: int, num_chunks: int = 1) -> float:
+def expected_wire_bytes(op: str, algo: str, M: int, n: int, num_chunks: int = 1,
+                        sizes=None) -> float:
     """Closed-form bytes-on-wire accounting the property tests check the
-    schedule-level accounting (``CollectivePlan.wire_bytes``) against."""
+    schedule-level accounting (``CollectivePlan.wire_bytes``) against.
+    Ragged algos need the row-count vector: wire bytes depend on WHICH ranks
+    (blocks) hold the rows, not just the total."""
     if n <= 1 or algo == "noop":
         return 0.0
+    if algo in _RAGGED_ALGOS:
+        sizes = _norm_sizes(op, sizes, n) if sizes is not None else None
+        if sizes is None or sum(sizes) == 0:
+            return 0.0
+        row = M / sum(sizes)
+        if algo == "ring_allgatherv":
+            # every segment crosses n-1 ring edges
+            return (n - 1) * sum(sizes) * row
+        if algo == "doubling_allgatherv":
+            # round t: each of the 2^t ranks holding a contiguous group of
+            # 2^t segments sends it to its partner
+            total, span = 0, 1
+            while span < n:
+                for base in range(0, n, span):
+                    total += span * sum(sizes[base:min(base + span, n)])
+                span *= 2
+            return total * row
+        m = comm_schedules.alltoallv_matrix(
+            tuple(sizes[r * n:(r + 1) * n] for r in range(n))
+            if len(sizes) == n * n else sizes, n)
+        if algo == "pairwise_alltoallv":
+            # every off-diagonal block crosses the wire exactly once
+            return sum(m[s][d] for s in range(n) for d in range(n) if s != d) * row
+        if algo == "ring_alltoallv":
+            # store-and-forward: each block pays its hop count
+            return sum(
+                m[s][d] * ((d - s) % n) for s in range(n) for d in range(n)
+            ) * row
     chunk = math.ceil(M / max(1, num_chunks))
     if algo == "scatter_allgather":
         # (n/2)*log2(n) scatter chunk-sends + n*(n-1) ring chunk-sends

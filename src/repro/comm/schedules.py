@@ -16,6 +16,18 @@ Data conventions (buffer is ``(num_chunks, chunk_elems)`` everywhere):
     rank holds all rows.
   * reduce_scatter — ``num_chunks == n``; every rank contributes all rows;
     on exit rank r's row r holds the sum of everyone's row r.
+
+Ragged ops view the chunk axis as a *row* axis (``Schedule.sizes``):
+
+  * allgatherv — ``num_chunks == sum(sizes)``; rank r starts owning the row
+    segment ``[off[r], off[r] + sizes[r])``; on exit every rank holds the
+    full concatenation. Zero-sized ranks contribute nothing (their segment
+    is never put on the wire).
+  * alltoallv — rows are partitioned into n*n blocks laid out row-major by
+    (src, dst); block (s, d) has ``sizes[s*n + d]`` rows at a fixed global
+    offset, so a transfer reads and writes the SAME row range on both ends
+    (the IR's invariant). Rank s fills blocks (s, *); on exit rank d's
+    blocks (*, d) are valid. Diagonal blocks never travel.
 """
 from __future__ import annotations
 
@@ -41,7 +53,14 @@ __all__ = [
     "ring_allgather",
     "doubling_allgather",
     "ring_reduce_scatter",
+    "ragged_offsets",
+    "alltoallv_matrix",
+    "ring_allgatherv",
+    "doubling_allgatherv",
+    "pairwise_alltoallv",
+    "ring_alltoallv",
     "OP_BUILDERS",
+    "RAGGED_OPS",
     "build_op",
 ]
 
@@ -201,6 +220,167 @@ def ring_reduce_scatter(n: int, root: int = 0) -> Schedule:
 
 
 # ---------------------------------------------------------------------------
+# Ragged collectives (allgatherv / alltoallv)
+# ---------------------------------------------------------------------------
+
+
+def _gatherv_sizes(n: int, sizes) -> tuple[int, ...]:
+    """Validated per-rank row counts for the allgatherv builders."""
+    flat = tuple(int(s) for s in sizes)
+    if len(flat) != n:
+        raise ValueError(f"allgatherv sizes must have n={n} entries, got {len(flat)}")
+    return flat
+
+
+def ragged_offsets(sizes) -> tuple[tuple[int, ...], int]:
+    """Prefix offsets of a size vector: ``(off_0..off_k, total)`` with a
+    sentinel ``off[k] == total`` so segment k spans ``[off[k], off[k+1])``."""
+    off, acc = [], 0
+    for s in sizes:
+        if s < 0:
+            raise ValueError(f"sizes must be non-negative: {tuple(sizes)}")
+        off.append(acc)
+        acc += int(s)
+    off.append(acc)
+    return tuple(off), acc
+
+
+def alltoallv_matrix(sizes, n: int) -> tuple[tuple[int, ...], ...]:
+    """Normalize an alltoallv size spec to an n x n matrix ``M[src][dst]``.
+
+    Accepts a length-n vector (every source sends ``sizes[d]`` rows to rank
+    d — the expert-dispatch case, where capacity is per destination), a flat
+    length-n*n row-major vector, or a full matrix."""
+    sizes = tuple(sizes)
+    if len(sizes) and isinstance(sizes[0], (tuple, list)):
+        m = tuple(tuple(int(v) for v in row) for row in sizes)
+        if len(m) != n or any(len(row) != n for row in m):
+            raise ValueError(f"alltoallv matrix must be {n}x{n}")
+        return m
+    if len(sizes) == n:
+        row = tuple(int(v) for v in sizes)
+        return tuple(row for _ in range(n))
+    if len(sizes) == n * n:
+        flat = tuple(int(v) for v in sizes)
+        return tuple(flat[s * n:(s + 1) * n] for s in range(n))
+    raise ValueError(f"alltoallv sizes must have n, n*n, or matrix shape; got {len(sizes)}")
+
+
+def ring_allgatherv(n: int, sizes, root: int = 0) -> Schedule:
+    """Ring allgatherv: round s forwards the segment that originated at rank
+    (r - s) mod n over edge r -> r+1. Empty segments never enter the ring,
+    so zero-sized ranks cost nothing; every round is gated by the largest
+    segment in flight — under skew the ring's bandwidth advantage evaporates
+    (see cost_model.t_ring_allgatherv)."""
+    sizes = _gatherv_sizes(n, sizes)
+    off, total = ragged_offsets(sizes)
+    if n == 1 or total == 0:
+        return Schedule("ring_allgatherv", n, root, total, (), kind="allgatherv",
+                        sizes=tuple(int(s) for s in sizes))
+    rounds = []
+    for s in range(n - 1):
+        transfers = []
+        for r in range(n):
+            seg = (r - s) % n
+            if sizes[seg]:
+                transfers.append(
+                    Transfer(r, (r + 1) % n, off[seg], int(sizes[seg]))
+                )
+        if transfers:
+            rounds.append(Round(tuple(transfers)))
+    return Schedule("ring_allgatherv", n, root, total, tuple(rounds),
+                    kind="allgatherv", sizes=tuple(int(s) for s in sizes))
+
+
+def doubling_allgatherv(n: int, sizes, root: int = 0) -> Schedule:
+    """Recursive-doubling allgatherv (power-of-two n): round t exchanges the
+    contiguous group of 2^t segments each side has gathered so far. Ragged
+    groups are still contiguous row ranges, so each exchange is ONE
+    variable-height transfer — log2(n) startups regardless of skew."""
+    if n & (n - 1):
+        raise ValueError(f"doubling_allgatherv requires power-of-two n, got {n}")
+    sizes = _gatherv_sizes(n, sizes)
+    off, total = ragged_offsets(sizes)
+    if n == 1 or total == 0:
+        return Schedule("doubling_allgatherv", n, root, total, (), kind="allgatherv",
+                        sizes=tuple(int(s) for s in sizes))
+    rounds = []
+    span = 1
+    while span < n:
+        transfers = []
+        for r in range(n):
+            base = (r // span) * span
+            cnt = off[base + span] - off[base]
+            if cnt:
+                transfers.append(Transfer(r, r ^ span, off[base], cnt))
+        if transfers:
+            rounds.append(Round(tuple(transfers)))
+        span *= 2
+    return Schedule("doubling_allgatherv", n, root, total, tuple(rounds),
+                    kind="allgatherv", sizes=tuple(int(s) for s in sizes))
+
+
+def pairwise_alltoallv(n: int, sizes, root: int = 0) -> Schedule:
+    """Pairwise-exchange alltoallv: step s (1..n-1) sends block (r, r+s)
+    directly to its destination — every block crosses the wire exactly once,
+    n-1 startups, each step gated by its largest block."""
+    m = alltoallv_matrix(sizes, n)
+    flat = tuple(v for row in m for v in row)
+    off, total = ragged_offsets(flat)
+    rounds = []
+    for s in range(1, n):
+        transfers = []
+        for r in range(n):
+            d = (r + s) % n
+            cnt = m[r][d]
+            if cnt:
+                transfers.append(Transfer(r, d, off[r * n + d], cnt))
+        if transfers:
+            rounds.append(Round(tuple(transfers)))
+    return Schedule("pairwise_alltoallv", n, root, total, tuple(rounds),
+                    kind="alltoallv", sizes=flat)
+
+
+def ring_alltoallv(n: int, sizes, root: int = 0) -> Schedule:
+    """Store-and-forward ring alltoallv: block (s, d) hops s -> s+1 -> ... -> d.
+    At round t every block still in transit is at rank (s + t) mod n, and all
+    blocks leaving rank r that round share the source s = (r - t) mod n, so
+    their destination set is a cyclic interval — at most two contiguous row
+    ranges per edge per round. Neighbor-only traffic, but each block pays its
+    hop count in wire bytes."""
+    m = alltoallv_matrix(sizes, n)
+    flat = tuple(v for row in m for v in row)
+    off, total = ragged_offsets(flat)
+    rounds = []
+    for t in range(n - 1):
+        transfers = []
+        for r in range(n):
+            s = (r - t) % n
+            # destinations still ahead of this block: (d - s) mod n > t
+            ds = [d for d in range(n) if (d - s) % n > t]
+            if not ds:
+                continue
+            # split the cyclic interval into contiguous column runs
+            runs, run = [], [ds[0]]
+            for d in ds[1:]:
+                if d == run[-1] + 1:
+                    run.append(d)
+                else:
+                    runs.append(run)
+                    run = [d]
+            runs.append(run)
+            for run in runs:
+                lo, hi = run[0], run[-1]
+                cnt = off[s * n + hi + 1] - off[s * n + lo]
+                if cnt:
+                    transfers.append(Transfer(r, (r + 1) % n, off[s * n + lo], cnt))
+        if transfers:
+            rounds.append(Round(tuple(transfers)))
+    return Schedule("ring_alltoallv", n, root, total, tuple(rounds),
+                    kind="alltoallv", sizes=flat)
+
+
+# ---------------------------------------------------------------------------
 # Registry (reduce_then_bcast is composite — built in plan.py, where the
 # inner bcast decision is available)
 # ---------------------------------------------------------------------------
@@ -221,16 +401,36 @@ OP_BUILDERS: dict[str, dict[str, Callable[..., Schedule]]] = {
     "reduce_scatter": {
         "ring_reduce_scatter": lambda n, root, num_chunks=None: ring_reduce_scatter(n, root),
     },
+    # ragged ops take a size vector instead of num_chunks; sizes=None falls
+    # back to the uniform one-row-per-rank layout (the plain op's shape)
+    "allgatherv": {
+        "ring_allgatherv": lambda n, root, sizes=None: ring_allgatherv(
+            n, sizes if sizes is not None else (1,) * n, root),
+        "doubling_allgatherv": lambda n, root, sizes=None: doubling_allgatherv(
+            n, sizes if sizes is not None else (1,) * n, root),
+    },
+    "alltoallv": {
+        "pairwise_alltoallv": lambda n, root, sizes=None: pairwise_alltoallv(
+            n, sizes if sizes is not None else (1,) * n, root),
+        "ring_alltoallv": lambda n, root, sizes=None: ring_alltoallv(
+            n, sizes if sizes is not None else (1,) * n, root),
+    },
 }
 
+RAGGED_OPS = ("allgatherv", "alltoallv")
 
-def build_op(op: str, algo: str, n: int, root: int = 0, *, num_chunks: int = 1) -> Schedule:
+
+def build_op(op: str, algo: str, n: int, root: int = 0, *, num_chunks: int = 1,
+             sizes=None) -> Schedule:
     """Build + validate a non-bcast op schedule by name."""
     try:
         builder = OP_BUILDERS[op][algo]
     except KeyError:
         have = {o: sorted(a) for o, a in OP_BUILDERS.items()}
         raise KeyError(f"no builder for op={op!r} algo={algo!r}; have {have}") from None
-    sched = builder(n, root, num_chunks=num_chunks)
+    if op in RAGGED_OPS:
+        sched = builder(n, root, sizes=sizes)
+    else:
+        sched = builder(n, root, num_chunks=num_chunks)
     sched.validate_ranks()
     return sched

@@ -31,6 +31,10 @@ class ModelConfig:
     capacity_factor: float = 1.25
     moe_group_size: int = 512       # GShard dispatch group length
     router_aux_coef: float = 0.01
+    # expert-dispatch transport: 'einsum' (dense one-hot; GSPMD infers the
+    # all-to-all) or 'alltoallv' (explicit repro.comm.palltoallv expert
+    # parallelism — needs an axis_name threaded to moe_ffn)
+    moe_dispatch: str = "einsum"
 
     # --- attention ---
     qkv_bias: bool = False

@@ -28,6 +28,7 @@ __all__ = [
     "t_bucketed_barrier",
     "optimal_overlap_depth",
     "window_finish_times",
+    "skew_ratio",
     "ALGO_COSTS",
 ]
 
@@ -233,6 +234,125 @@ def t_ring_reduce_scatter(M: float, n: int, hw: Hardware, B: float) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Ragged collectives (allgatherv / alltoallv). ``sizes`` is the per-rank (or
+# per-block) payload in BYTES; ``None`` prices the uniform M/n (M/n^2) split,
+# which collapses every form below to its uniform counterpart. The skew term
+# max(sizes) vs sum(sizes) is what inverts the ring/pairwise decision — the
+# regime the Allgatherv study (arXiv:1812.05964) measures.
+# ---------------------------------------------------------------------------
+
+
+def skew_ratio(sizes: Sequence[float]) -> float:
+    """max(sizes) / mean(sizes) — 1.0 for uniform, up to len(sizes) for a
+    single hot rank. The tuner buckets empirical keys on log2 of this."""
+    sizes = [float(s) for s in sizes]
+    total = sum(sizes)
+    if not sizes or total <= 0:
+        return 1.0
+    return max(sizes) * len(sizes) / total
+
+
+def _gatherv_sizes(M: float, n: int, sizes: Sequence[float] | None) -> list[float]:
+    if sizes is None:
+        return [M / max(n, 1)] * n
+    return [float(s) for s in sizes]
+
+
+def _a2av_matrix(M: float, n: int, sizes: Sequence[float] | None) -> list[list[float]]:
+    if sizes is None:
+        b = M / max(n * n, 1)
+        return [[b] * n for _ in range(n)]
+    flat = [float(s) for s in sizes]
+    if len(flat) == n:          # per-destination vector, uniform across sources
+        return [list(flat) for _ in range(n)]
+    if len(flat) == n * n:
+        return [flat[r * n:(r + 1) * n] for r in range(n)]
+    raise ValueError(f"alltoallv sizes must have n or n*n entries, got {len(flat)}")
+
+
+def t_ring_allgatherv(M: float, n: int, hw: Hardware, B: float,
+                      sizes: Sequence[float] | None = None) -> float:
+    """Ring allgatherv: n-1 neighbor rounds, but EVERY round is gated by the
+    largest segment in flight somewhere on the ring:
+
+        T = (n - 1) * (ts + max(sizes)/B)
+
+    Uniform sizes recover t_ring_allgather; under skew the cost is keyed on
+    max(sizes) while the wire total is keyed on sum(sizes) — the ring's
+    bandwidth optimality evaporates as skew grows."""
+    if n <= 1:
+        return 0.0
+    sz = _gatherv_sizes(M, n, sizes)
+    return (n - 1) * (hw.ts + max(sz) / B)
+
+
+def t_doubling_allgatherv(M: float, n: int, hw: Hardware, B: float,
+                          sizes: Sequence[float] | None = None) -> float:
+    """Recursive-doubling allgatherv: log2(n) rounds, round t gated by the
+    largest contiguous group of 2^t segments.
+
+    Unlike the switch-fabric ``t_doubling_allgather`` (the paper's IB
+    cluster, where any pair is one hop), the ragged variant prices the
+    ring-embedded ICI fabric: a distance-2^t exchange occupies 2^t
+    consecutive links, dividing per-link bandwidth by the hop count. Under
+    uniform sizes the quadratic hop-weighted bytes lose to the ring; under
+    skew the hot segment pays its (n-1) hop-bytes either way and doubling
+    wins back (n-1) - log2(n) startups — the inversion the tuner keys on."""
+    if n <= 1:
+        return 0.0
+    sz = _gatherv_sizes(M, n, sizes)
+    t, span = 0.0, 1
+    while span < n:
+        worst = 0.0
+        for base in range(0, n, span):
+            worst = max(worst, sum(sz[base:min(base + span, n)]))
+        if worst > 0:
+            t += hw.ts + min(span, n - span) * worst / B
+        span *= 2
+    return t
+
+
+def t_pairwise_alltoallv(M: float, n: int, hw: Hardware, B: float,
+                         sizes: Sequence[float] | None = None) -> float:
+    """Pairwise-exchange alltoallv: n-1 steps, step s gated by the largest
+    (r -> r+s) block; every block crosses the wire once, but a step of ring
+    distance d occupies d consecutive ICI links (hop-weighted bandwidth,
+    as in :func:`t_doubling_allgatherv`). Hot-destination (incast) skew
+    makes the far steps carry the hot block over their full distance —
+    the regime where the store-and-forward ring wins."""
+    if n <= 1:
+        return 0.0
+    m = _a2av_matrix(M, n, sizes)
+    t = 0.0
+    for s in range(1, n):
+        worst = max(m[r][(r + s) % n] for r in range(n))
+        if worst > 0:
+            t += hw.ts + min(s, n - s) * worst / B
+    return t
+
+
+def t_ring_alltoallv(M: float, n: int, hw: Hardware, B: float,
+                     sizes: Sequence[float] | None = None) -> float:
+    """Store-and-forward ring alltoallv: n-1 neighbor rounds; round t is
+    gated by the heaviest edge, which carries every not-yet-delivered block
+    whose current holder feeds that edge. Each block pays its hop count in
+    wire bytes, so hot blocks far from their destination hurt most."""
+    if n <= 1:
+        return 0.0
+    m = _a2av_matrix(M, n, sizes)
+    t = 0.0
+    for step in range(n - 1):
+        worst = 0.0
+        for r in range(n):
+            s = (r - step) % n
+            load = sum(m[s][d] for d in range(n) if (d - s) % n > step)
+            worst = max(worst, load)
+        if worst > 0:
+            t += hw.ts + worst / B
+    return t
+
+
+# ---------------------------------------------------------------------------
 # Compute/communication overlap (the CNTK end-to-end regime, paper Sec. V-D):
 # bucketed gradient sync pipelined against backward compute. These price
 # *schedules of* collectives — the overlap engine (repro.comm.overlap) feeds
@@ -363,6 +483,11 @@ ALGO_COSTS = {
     "ring_allgather": t_ring_allgather,
     "doubling_allgather": t_doubling_allgather,
     "ring_reduce_scatter": t_ring_reduce_scatter,
+    # ragged ops (skew-aware; sizes in bytes via cost(..., sizes=...))
+    "ring_allgatherv": t_ring_allgatherv,
+    "doubling_allgatherv": t_doubling_allgatherv,
+    "pairwise_alltoallv": t_pairwise_alltoallv,
+    "ring_alltoallv": t_ring_alltoallv,
 }
 
 

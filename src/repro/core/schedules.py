@@ -17,6 +17,13 @@ point-to-point sends; the runtime then maps it onto the fabric.
 Chunks: the message is viewed as ``num_chunks`` equal chunks. Whole-message
 algorithms use ``num_chunks == 1``. A transfer moves the contiguous chunk
 range ``[chunk_start, chunk_start + chunk_count)``.
+
+Ragged collectives (allgatherv/alltoallv) reuse the same chunk axis as a
+*row* axis: ``Schedule.sizes`` records the per-rank (or per-block) row
+counts, ``num_chunks == sum(sizes)``, and transfers move variable-height
+contiguous row ranges. Nothing else in the IR changes — the lowering's
+per-rank ``[lo, hi)`` windows already express a ragged tail as a narrower
+row window of a fixed-height block.
 """
 from __future__ import annotations
 
@@ -74,7 +81,11 @@ class Round:
     A destination may appear more than once in a round only if the incoming
     chunk ranges are disjoint (e.g. the fused allreduce chain, where an
     interior rank receives a reduce chunk and a bcast chunk concurrently on
-    its two full-duplex links)."""
+    its two full-duplex links).
+
+    Transfers in one round may move ranges of different heights (ragged
+    collectives do); :func:`lane_partition` keeps each ppermute lane
+    uniform-height so the executors' static block slices stay valid."""
 
     transfers: Tuple[Transfer, ...]
 
@@ -92,12 +103,8 @@ class Round:
                             f"overlapping chunk ranges for destination {dst}: {ts}"
                         )
                     seen |= rng
-        counts = {t.chunk_count for t in self.transfers}
-        if len(counts) > 1:
-            raise ValueError(
-                "transfers within one round must move equal-sized ranges "
-                f"(got counts {sorted(counts)})"
-            )
+        if any(t.chunk_count <= 0 for t in self.transfers):
+            raise ValueError("transfers must move a non-empty chunk range")
 
     @property
     def chunk_count(self) -> int:
@@ -114,10 +121,15 @@ class Schedule:
     num_chunks: int
     rounds: Tuple[Round, ...]
     # collective op this schedule implements: 'bcast' | 'reduce' |
-    # 'allreduce' | 'allgather' | 'reduce_scatter'. Reduce-family transfers
-    # carry combine=True (accumulate at dst); see repro.comm.schedules for
-    # the non-bcast builders.
+    # 'allreduce' | 'allgather' | 'reduce_scatter' | 'allgatherv' |
+    # 'alltoallv'. Reduce-family transfers carry combine=True (accumulate at
+    # dst); see repro.comm.schedules for the non-bcast builders.
     kind: str = "bcast"
+    # Ragged collectives: per-rank (allgatherv, len n) or per-(src, dst)
+    # block (alltoallv, len n*n row-major) row counts. When set,
+    # ``num_chunks == sum(sizes)`` and the chunk axis is the row axis of the
+    # ragged payload. ``None`` for uniform collectives.
+    sizes: Tuple[int, ...] | None = None
 
     @property
     def num_rounds(self) -> int:
@@ -128,6 +140,17 @@ class Schedule:
         return sum(t.chunk_count for r in self.rounds for t in r.transfers)
 
     def validate_ranks(self) -> None:
+        if self.sizes is not None:
+            if len(self.sizes) not in (self.n, self.n * self.n):
+                raise ValueError(
+                    f"sizes must have n or n*n entries, got {len(self.sizes)}"
+                )
+            if any(s < 0 for s in self.sizes):
+                raise ValueError(f"sizes must be non-negative: {self.sizes}")
+            if sum(self.sizes) != self.num_chunks:
+                raise ValueError(
+                    f"sum(sizes)={sum(self.sizes)} != num_chunks={self.num_chunks}"
+                )
         for r in self.rounds:
             for t in r.transfers:
                 if not (0 <= t.src < self.n and 0 <= t.dst < self.n):
@@ -160,8 +183,10 @@ def _rot(rank: int, root: int, n: int) -> int:
 def lane_partition(transfers) -> list[list[Transfer]]:
     """Partition a round's transfers into ppermute lanes: within one lane
     each rank is a source at most once AND a destination at most once, and
-    all transfers share the combine flag. Multi-lane rounds (bidir chain,
-    fused_rsb) run on disjoint full-duplex links concurrently on TPU.
+    all transfers share the combine flag and block height (so the executor's
+    static-shape slice per lane stays valid for ragged rounds). Multi-lane
+    rounds (bidir chain, fused_rsb) run on disjoint full-duplex links
+    concurrently on TPU.
 
     Greedy first-fit is O(T^2) in the round's transfer count — which is why
     it lives in the host-side lowering (computed once per schedule via
@@ -171,6 +196,7 @@ def lane_partition(transfers) -> list[list[Transfer]]:
         for lane in lanes:
             if (
                 lane[0].combine == t.combine
+                and lane[0].chunk_count == t.chunk_count
                 and all(t.src != u.src and t.dst != u.dst for u in lane)
             ):
                 lane.append(t)

@@ -24,10 +24,15 @@ from typing import Callable, Iterable, Sequence
 from . import cost_model
 from .cost_model import Hardware, TPU_V5E
 
-__all__ = ["Decision", "Tuner", "default_tuner", "OPS"]
+__all__ = ["Decision", "Tuner", "default_tuner", "OPS", "RAGGED_OPS"]
 
 # collective ops the tuner prices; 'bcast' keeps the legacy table-key format
-OPS = ("bcast", "reduce", "allreduce", "allgather", "reduce_scatter")
+OPS = ("bcast", "reduce", "allreduce", "allgather", "reduce_scatter",
+       "allgatherv", "alltoallv")
+
+# ragged ops: decisions additionally depend on the per-rank size vector
+# (skew-bucketed into the empirical key; fed to the skew-aware cost forms)
+RAGGED_OPS = ("allgatherv", "alltoallv")
 
 
 def _is_pow2(n: int) -> bool:
@@ -88,6 +93,14 @@ _OP_CANDIDATES: dict[str, dict[str, Callable[[int, int], bool]]] = {
     },
     "reduce_scatter": {
         "ring_reduce_scatter": lambda M, n: True,
+    },
+    "allgatherv": {
+        "ring_allgatherv": lambda M, n: True,
+        "doubling_allgatherv": lambda M, n: _is_pow2(n),
+    },
+    "alltoallv": {
+        "pairwise_alltoallv": lambda M, n: True,
+        "ring_alltoallv": lambda M, n: True,
     },
 }
 
@@ -181,16 +194,68 @@ class Tuner:
         t, algo, num_chunks = best
         return Decision(algo, num_chunks, math.ceil(M / num_chunks), t, "analytic")
 
+    def _analytic_ragged(self, op: str, M: int, n: int, inter_pod: bool,
+                         sizes: Sequence[int] | None) -> Decision:
+        """Analytic selection for the ragged ops. ``sizes`` is the row-count
+        vector (per rank for allgatherv; per destination or per (src, dst)
+        block for alltoallv); the cost forms are fed byte sizes so the
+        max(sizes)-vs-sum(sizes) skew term prices each candidate."""
+        B = self.hw.path_bw(inter_pod)
+        total = sum(sizes) if sizes else 0
+        if total <= 0:
+            sizes, total = None, 0
+        row_bytes = M / total if total else float(M)
+        sizes_bytes = [s * row_bytes for s in sizes] if sizes is not None else None
+        best: tuple[float, str] | None = None
+        for algo, ok in _OP_CANDIDATES[op].items():
+            if not ok(M, n):
+                continue
+            t = cost_model.cost(algo, M, n, self.hw, inter_pod=inter_pod,
+                                sizes=sizes_bytes)
+            if best is None or t < best[0]:
+                best = (t, algo)
+        assert best is not None, f"no applicable {op} algorithm for (M={M}, n={n})"
+        t, algo = best
+        # the schedule's chunk axis is the ragged row axis: num_chunks is
+        # pinned by the size vector (sum of rows), never swept
+        num_chunks = max(total, 1)
+        return Decision(algo, num_chunks, math.ceil(M / num_chunks), t, "analytic")
+
     # -- empirical table ----------------------------------------------------
 
     @staticmethod
     def _bucket(M: int) -> int:
         return max(0, int(math.log2(max(M, 1))))
 
-    def _key(self, M: int, n: int, inter_pod: bool, op: str = "bcast") -> str:
+    @staticmethod
+    def _flat_sizes(sizes):
+        """Canonical flat tuple: alltoallv callers may hand the n x n nested
+        block matrix straight to select/record."""
+        if sizes is None:
+            return None
+        sizes = tuple(sizes)
+        if sizes and isinstance(sizes[0], (list, tuple)):
+            return tuple(int(v) for row in sizes for v in row)
+        return tuple(int(s) for s in sizes)
+
+    @staticmethod
+    def _skew_bucket(sizes: Sequence[int] | None) -> int:
+        """log2 bucket of max/mean — 0 for uniform (or unknown) sizes, up to
+        log2(len) for a single hot rank. Ragged empirical keys carry it so a
+        measurement under skew never overrides the uniform bucket."""
+        if not sizes or sum(sizes) <= 0:
+            return 0
+        return max(0, int(round(math.log2(cost_model.skew_ratio(sizes)))))
+
+    def _key(self, M: int, n: int, inter_pod: bool, op: str = "bcast",
+             sizes: Sequence[int] | None = None) -> str:
         # bcast keeps the legacy key format so existing saved tables load
         base = f"{n}:{self._bucket(M)}:{int(inter_pod)}"
-        return base if op == "bcast" else f"{op}:{base}"
+        if op == "bcast":
+            return base
+        if op in RAGGED_OPS:
+            return f"{op}:{base}:s{self._skew_bucket(sizes)}"
+        return f"{op}:{base}"
 
     def fingerprint(self) -> str:
         """Content hash of everything a tuned decision can depend on: the
@@ -221,8 +286,8 @@ class Tuner:
         self._fingerprint = (self._version, fp)
         return fp
 
-    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast", overlap_depth: int | None = None, fused_path: bool | None = None) -> None:
-        key = self._key(M, n, inter_pod, op)
+    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast", overlap_depth: int | None = None, fused_path: bool | None = None, sizes: Sequence[int] | None = None) -> None:
+        key = self._key(M, n, inter_pod, op, self._flat_sizes(sizes))
         prev = self.table.get(key)
         # depth-only entries (record_overlap before any measurement) carry no
         # measured_s and never block a real measurement from landing
@@ -312,23 +377,39 @@ class Tuner:
 
     # -- public -------------------------------------------------------------
 
-    def select(self, M: int, n: int, *, op: str = "bcast", inter_pod: bool = False) -> Decision:
+    def select(self, M: int, n: int, *, op: str = "bcast", inter_pod: bool = False,
+               sizes: Sequence[int] | None = None) -> Decision:
         """Tuned decision for one collective: op in :data:`OPS` (default
         'bcast' — the legacy single-op signature is unchanged). Empirical
-        table entries are keyed per-op and override the analytic choice."""
+        table entries are keyed per-op and override the analytic choice.
+
+        Ragged ops (``allgatherv``/``alltoallv``) take the row-count vector
+        via ``sizes``: the analytic path prices candidates with the
+        skew-aware cost forms and the empirical key carries a skew bucket,
+        so a table entry measured under one skew regime never decides for
+        another."""
         if op not in OPS:
             raise ValueError(f"unknown collective op {op!r}; have {OPS}")
+        if sizes is not None and op not in RAGGED_OPS:
+            raise ValueError(f"sizes= is only meaningful for {RAGGED_OPS}, not {op!r}")
+        sizes = self._flat_sizes(sizes)
         if n <= 1:
             return Decision("noop", 1, max(M, 1), 0.0, "analytic")
-        hit = self.table.get(self._key(M, n, inter_pod, op))
+        hit = self.table.get(self._key(M, n, inter_pod, op, sizes))
         depth = hit.get("overlap_depth") if hit is not None else None
         depth = max(1, int(depth)) if depth is not None else None
         if hit is not None and "algo" in hit:
-            # Empirical entries are data, not code: a table recorded with a
-            # larger max_chunks (or a corrupted num_chunks < 1) must not flow
-            # into a Decision the executors can't honor — clamp at hit time,
-            # exactly as Tuner.load clamps at read time.
-            k = min(max(int(hit["num_chunks"]), 1), self.max_chunks)
+            if op in RAGGED_OPS:
+                # the size vector pins the chunk axis: only the algorithm
+                # choice (and executor routing) comes from the table
+                k = max(sum(sizes), 1) if sizes else 1
+            else:
+                # Empirical entries are data, not code: a table recorded
+                # with a larger max_chunks (or a corrupted num_chunks < 1)
+                # must not flow into a Decision the executors can't honor —
+                # clamp at hit time, exactly as Tuner.load clamps at read
+                # time.
+                k = min(max(int(hit["num_chunks"]), 1), self.max_chunks)
             return Decision(
                 hit["algo"],
                 k,
@@ -340,7 +421,12 @@ class Tuner:
             )
         # depth-only entries (record_overlap with no measurement yet) keep
         # the analytic pricing and only annotate the decision with the depth
-        dec = self._analytic(M, n, inter_pod) if op == "bcast" else self._analytic_op(op, M, n, inter_pod)
+        if op == "bcast":
+            dec = self._analytic(M, n, inter_pod)
+        elif op in RAGGED_OPS:
+            dec = self._analytic_ragged(op, M, n, inter_pod, sizes)
+        else:
+            dec = self._analytic_op(op, M, n, inter_pod)
         return dataclasses.replace(dec, overlap_depth=depth) if depth is not None else dec
 
     # -- persistence ---------------------------------------------------------

@@ -120,8 +120,11 @@ def apply_block(
     positions=None,
     causal: bool = True,
     cross_inputs=None,
+    axis_name=None,
 ):
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss). ``axis_name`` names the mesh axis
+    for explicit MoE expert dispatch (``cfg.moe_dispatch='alltoallv'``);
+    None keeps the dense einsum formulation."""
     spec = attn_spec_for(cfg, window, causal)
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
@@ -192,7 +195,8 @@ def apply_block(
     if "mlp" in p:
         x = x + mlp(p["mlp"], rms_norm(p["norm2"], x, cfg.norm_eps), cfg.act)
     elif "moe" in p:
-        y, a = moe_lib.moe_ffn(p["moe"], rms_norm(p["norm2"], x, cfg.norm_eps), cfg)
+        y, a = moe_lib.moe_ffn(p["moe"], rms_norm(p["norm2"], x, cfg.norm_eps), cfg,
+                               axis_name=axis_name)
         x = x + y
         aux = aux + a
 

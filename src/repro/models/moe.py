@@ -6,16 +6,30 @@ through einsums so GSPMD shards experts on the `model` mesh axis (the
 all-to-all appears in the lowered HLO). Tokens overflowing an expert's
 capacity are dropped (residual passes through), as in GShard/Switch.
 
+Two dispatch transports (``cfg.moe_dispatch``):
+
+- ``"einsum"`` (default): the dense one-hot einsum formulation above. GSPMD
+  infers the all-to-all; it is also the single-host oracle the explicit
+  path is tested against.
+- ``"alltoallv"``: explicit expert parallelism over a named mesh axis via
+  :func:`repro.comm.palltoallv`. Tokens stay batch-sharded; experts are
+  contiguously partitioned across ranks (E need not divide n — the ragged
+  block sizes are exactly the ``sizes`` matrix of the schedule-IR
+  alltoallv). Routing/combine math is identical to the einsum path, so the
+  two agree to summation order.
+
 Shared experts (DeepSeek/Moonlight style) run densely for every token.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
 from .layers import _norm_init, down_proj
 
-__all__ = ["init_moe", "moe_ffn"]
+__all__ = ["init_moe", "moe_ffn", "expert_partition"]
 
 
 def init_moe(key, cfg, dtype=jnp.bfloat16):
@@ -40,17 +54,31 @@ def init_moe(key, cfg, dtype=jnp.bfloat16):
 
 def _capacity(S: int, k: int, E: int, cf: float) -> int:
     c = int(S * k * cf / E) + 1
-    return max(4, min(c, S * k)) if S > 1 else max(1, k)
+    # the floor of 4 keeps tiny groups from thrashing drops, but it must
+    # never exceed the S*k slot supply (S=2, k=1 has only 2 slots total)
+    return max(min(4, S * k), min(c, S * k)) if S > 1 else max(1, k)
 
 
-def moe_ffn(p, x, cfg):
-    """x: (B, T, D) -> (out, aux_loss)."""
-    B, T, D = x.shape
-    E, k = cfg.num_experts, cfg.experts_per_token
+def _group_size(T: int, cfg) -> int:
+    """Dispatch group length: ``cfg.moe_group_size`` when it divides T,
+    else the largest divisor of T that fits (T=520, group 512 -> 260;
+    prime T degrades to 1 rather than asserting)."""
     S = min(cfg.moe_group_size, T)
-    assert T % S == 0, f"seq {T} not divisible by moe group {S}"
-    nG = T // S
-    xg = x.reshape(B, nG, S, D)
+    if T % S:
+        S = max(d for d in range(1, S + 1) if T % d == 0)
+    return S
+
+
+def _route(p, xg, cfg):
+    """Router + capacity bookkeeping on grouped tokens (B, nG, S, D).
+
+    Returns (combine, dispatch, me, ce): the (B, nG, S, E, C) combine /
+    dispatch tensors and the load-balancing statistics — ``me`` the mean
+    router probability and ``ce`` the fraction of tokens routed per expert
+    (normalized by k so it sums to ~1 regardless of top-k width).
+    """
+    B, nG, S, D = xg.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
 
     logits = jnp.einsum("bgsd,de->bgse", xg.astype(jnp.float32), p["router"])
     probs = jax.nn.softmax(logits, axis=-1)
@@ -70,8 +98,45 @@ def moe_ffn(p, x, cfg):
     onehot_c = jax.nn.one_hot(pos_in_e.astype(jnp.int32), C, dtype=jnp.float32)
 
     combine = jnp.einsum("bgske,bgsk,bgskc->bgsec", onehot_e, gate_vals, onehot_c)
-    dispatch = (combine > 0).astype(x.dtype)                     # (B,nG,S,E,C)
-    combine = combine.astype(x.dtype)
+    dispatch = (combine > 0).astype(xg.dtype)                    # (B,nG,S,E,C)
+    combine = combine.astype(xg.dtype)
+
+    # GShard load-balancing statistics (each a length-E batch mean)
+    me = jnp.mean(probs, axis=(0, 1, 2))
+    ce = jnp.mean(onehot_e.sum(axis=3), axis=(0, 1, 2)) / max(k, 1)
+    return combine, dispatch, me, ce
+
+
+def _shared_out(p, x):
+    sp = p["shared"]
+    hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+    return down_proj(hs, sp["w_down"])
+
+
+def expert_partition(E: int, n: int) -> tuple[int, ...]:
+    """Contiguous expert counts per rank: the first ``E % n`` ranks take one
+    extra (E=6, n=4 -> (2, 2, 1, 1)). Ranks beyond E hold zero experts."""
+    base, rem = divmod(E, n)
+    return tuple(base + (1 if r < rem else 0) for r in range(n))
+
+
+def moe_ffn(p, x, cfg, *, axis_name=None):
+    """x: (B, T, D) -> (out, aux_loss).
+
+    With ``axis_name`` set and ``cfg.moe_dispatch == "alltoallv"``, runs the
+    explicit expert-parallel transport over that mesh axis (call inside
+    ``shard_map`` with the batch sharded on the axis); otherwise the dense
+    einsum formulation.
+    """
+    if axis_name is not None and getattr(cfg, "moe_dispatch", "einsum") == "alltoallv":
+        return _moe_ffn_alltoallv(p, x, cfg, axis_name)
+    B, T, D = x.shape
+    E = cfg.num_experts
+    S = _group_size(T, cfg)
+    nG = T // S
+    xg = x.reshape(B, nG, S, D)
+
+    combine, dispatch, me, ce = _route(p, xg, cfg)
 
     expert_in = jnp.einsum("bgsec,bgsd->ebgcd", dispatch, xg)
     h = jax.nn.silu(jnp.einsum("ebgcd,edf->ebgcf", expert_in, p["w_gate"]))
@@ -82,12 +147,86 @@ def moe_ffn(p, x, cfg):
     y = jnp.einsum("bgsec,ebgcd->bgsd", combine, expert_out).reshape(B, T, D)
 
     if "shared" in p:
-        sp = p["shared"]
-        hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
-        y = y + down_proj(hs, sp["w_down"])
+        y = y + _shared_out(p, x)
 
-    # GShard load-balancing auxiliary loss
-    me = jnp.mean(probs, axis=(0, 1, 2))                         # (E,)
-    ce = jnp.mean(onehot_e.sum(axis=3), axis=(0, 1, 2))          # fraction routed
     aux = E * jnp.sum(me * ce) * cfg.router_aux_coef
+    return y, aux
+
+
+def _moe_ffn_alltoallv(p, x, cfg, axis_name):
+    """Expert-parallel MoE over ``axis_name`` via the ragged alltoallv.
+
+    Contract: ``x`` is the rank's batch shard (B_loc, T, D); expert weights
+    are replicated. Experts partition contiguously across the n ranks
+    (:func:`expert_partition` — ragged when n does not divide E). Per
+    expert the dispatch tensor supplies R = B_loc * nG * C capacity rows,
+    so the forward block matrix is m[s][d] = cnt[d] * R (uniform per
+    destination) and the return matrix its transpose — exactly the ragged
+    ``sizes`` the schedule-IR alltoallv consumes. The returned aux loss is
+    the global-batch value (me/ce are pmean'd before combining), matching
+    the einsum oracle run on the unsharded batch.
+    """
+    from ..comm.api import palltoallv
+
+    B, T, D = x.shape
+    E = cfg.num_experts
+    n = lax.axis_size(axis_name)
+    S = _group_size(T, cfg)
+    nG = T // S
+    xg = x.reshape(B, nG, S, D)
+
+    combine, dispatch, me, ce = _route(p, xg, cfg)
+    C = combine.shape[-1]
+    R = B * nG * C                         # capacity rows per expert
+    cnt = expert_partition(E, n)
+    cnt_max = max(cnt)
+
+    # ---- forward transport: (E, B, nG, C, D) flattened expert-major is
+    # already the destination-major compact layout (experts contiguous per
+    # rank). Out as padded (n, cnt_max*R, D) blocks: source s's tokens for
+    # my cnt[r] local experts live in out[s]'s valid prefix.
+    expert_in = jnp.einsum("bgsec,bgsd->ebgcd", dispatch, xg)
+    fwd = palltoallv(
+        expert_in.reshape(E * R, D), axis_name,
+        sizes=[c * R for c in cnt], out_padded=True,
+    )
+    din = fwd.reshape(n, cnt_max, B, nG, C, D)
+
+    # ---- local experts, padded to cnt_max with zero-masked weights: slot
+    # j >= cnt[rank] computes silu(0)*0 = 0, so garbage slots are inert
+    widx = np.zeros((n, cnt_max), np.int32)
+    wvalid = np.zeros((n, cnt_max), bool)
+    e0 = 0
+    for r in range(n):
+        widx[r, : cnt[r]] = np.arange(e0, e0 + cnt[r])
+        wvalid[r, : cnt[r]] = True
+        e0 += cnt[r]
+    rank = lax.axis_index(axis_name)
+    idx = jnp.asarray(widx)[rank]
+    mask = jnp.asarray(wvalid)[rank][:, None, None]
+    w_gate = p["w_gate"][idx] * mask
+    w_up = p["w_up"][idx] * mask
+    w_down = p["w_down"][idx] * mask
+
+    h = jax.nn.silu(jnp.einsum("sjbgcd,jdf->sjbgcf", din, w_gate))
+    h = h * jnp.einsum("sjbgcd,jdf->sjbgcf", din, w_up)
+    eo = jnp.einsum(
+        "sjbgcf,jfd->sjbgcd", h, w_down, preferred_element_type=h.dtype
+    )
+
+    # ---- return transport: block to source d is eo[d]'s valid prefix
+    # (cnt[rank] local experts) — the transposed matrix, padded input
+    back = palltoallv(
+        eo.reshape(n, cnt_max * R, D), axis_name,
+        sizes=[[c * R] * n for c in cnt], in_padded=True,
+    )
+    expert_out = back.reshape(E, B, nG, C, D)   # global expert order
+
+    y = jnp.einsum("bgsec,ebgcd->bgsd", combine, expert_out).reshape(B, T, D)
+    if "shared" in p:
+        y = y + _shared_out(p, x)
+
+    me_g = lax.pmean(me, axis_name)
+    ce_g = lax.pmean(ce, axis_name)
+    aux = E * jnp.sum(me_g * ce_g) * cfg.router_aux_coef
     return y, aux

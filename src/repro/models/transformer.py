@@ -113,8 +113,11 @@ def _apply_stack(
     causal: bool = True,
     cross_inputs=None,
     remat: bool = False,
+    axis_name=None,
 ):
-    """Returns (x, new_caches, aux). Caches: {'blocks': [...], 'tail': [...]}"""
+    """Returns (x, new_caches, aux). Caches: {'blocks': [...], 'tail': [...]}
+    ``axis_name`` routes MoE expert dispatch over that mesh axis (see
+    ``apply_block``)."""
     P = layout.period
     kinds, wins = layout.kinds, layout.windows
     run_block = partial(
@@ -126,6 +129,7 @@ def _apply_stack(
         prefix_len=prefix_len,
         causal=causal,
         cross_inputs=cross_inputs,
+        axis_name=axis_name,
     )
 
     def body(x, xs):

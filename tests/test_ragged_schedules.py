@@ -1,0 +1,285 @@
+"""Host-level tests for the ragged collectives (allgatherv / alltoallv).
+
+ISSUE acceptance, numpy side:
+  * every ragged builder converges in the numpy simulator across skewed
+    size vectors INCLUDING zero-sized ranks, at n in {2, 3, 4, 8};
+  * the lowered dense tables replay bit-identically to the IR walk
+    (``simulate_lowered`` parity) for ragged schedules;
+  * wire-byte accounting: ``CollectivePlan.wire_bytes()`` equals the
+    closed forms in ``plan.expected_wire_bytes`` for every ragged algo;
+  * the skew-aware tuner inverts: uniform-large picks ring, one-hot skew
+    picks doubling (allgatherv); uniform picks pairwise, incast picks the
+    store-and-forward ring (alltoallv);
+  * the plan cache keys on the size vector;
+  * ``load_ragged_table`` rejects accounting drift.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.comm import plan_cache_clear, plan_cached, plan_collective
+from repro.comm import schedules as comm_schedules
+from repro.comm.plan import expected_wire_bytes
+from repro.comm.tables import TableSchemaError, load_ragged_table
+from repro.core.cost_model import skew_ratio
+from repro.core.schedules import lane_partition
+from repro.core.schedules import lower_schedule
+from repro.core.simulator import simulate_collective, simulate_lowered
+from repro.core.tuner import Tuner
+
+RNG = np.random.RandomState(7)
+
+# size vectors per rank count: uniform, skewed, one-hot, zero ranks
+GATHERV_CASES = {
+    2: [(1, 1), (3, 1), (4, 0)],
+    3: [(2, 2, 2), (1, 5, 2), (0, 3, 0)],
+    4: [(2, 2, 2, 2), (3, 1, 0, 2), (7, 0, 0, 1), (0, 0, 5, 0)],
+    8: [(1,) * 8, (5, 0, 1, 3, 0, 2, 4, 1), (9,) + (0,) * 7],
+}
+
+
+def _a2av_cases(n):
+    uniform = tuple(tuple(2 for _ in range(n)) for _ in range(n))
+    skewed = tuple(tuple((s * n + d) % 4 for d in range(n)) for s in range(n))
+    incast = tuple(tuple(5 if d == 0 else 1 for d in range(n)) for s in range(n))
+    zero_col = tuple(
+        tuple(0 if d == n - 1 else 2 for d in range(n)) for s in range(n)
+    )
+    return [uniform, skewed, incast, zero_col]
+
+
+def _owner(op, sizes, n):
+    sz = np.asarray(sizes, dtype=np.int64)
+    if op == "allgatherv":
+        return np.repeat(np.arange(n), sz)
+    return np.repeat(np.arange(n * n) // n, sz)
+
+
+def _scattered(op, sizes, n, full):
+    owner = _owner(op, sizes, n)
+    return [np.where((owner == r)[:, None], full, 0.0) for r in range(n)]
+
+
+def _assert_converged(op, sched, sizes, n, out, full):
+    off = np.concatenate([[0], np.cumsum(sizes)])
+    if op == "allgatherv":
+        for r in range(n):
+            np.testing.assert_array_equal(out[r], full, err_msg=f"rank {r}")
+    else:
+        for r in range(n):
+            for s in range(n):
+                b = s * n + r
+                lo, hi = off[b], off[b + 1]
+                np.testing.assert_array_equal(
+                    out[r][lo:hi], full[lo:hi], err_msg=f"rank {r} block {s}->{r}"
+                )
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 8])
+def test_allgatherv_builders_converge_and_lower(n):
+    for sizes in GATHERV_CASES[n]:
+        for algo in ("ring_allgatherv", "doubling_allgatherv"):
+            if algo == "doubling_allgatherv" and n & (n - 1):
+                continue
+            sched = comm_schedules.build_op("allgatherv", algo, n, 0, sizes=sizes)
+            sched.validate_ranks()
+            assert sched.sizes == tuple(sizes)
+            assert sched.num_chunks == sum(sizes)
+            full = RNG.randn(sched.num_chunks, 3)
+            data = _scattered("allgatherv", sizes, n, full)
+            out = simulate_collective(sched, data)
+            _assert_converged("allgatherv", sched, sizes, n, out, full)
+            # lowered dense tables replay bit-identically
+            out2 = simulate_lowered(lower_schedule(sched), _scattered("allgatherv", sizes, n, full))
+            for r in range(n):
+                np.testing.assert_array_equal(out[r], out2[r])
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 8])
+def test_alltoallv_builders_converge_and_lower(n):
+    for m in _a2av_cases(n):
+        flat = tuple(v for row in m for v in row)
+        if sum(flat) == 0:
+            continue
+        for algo in ("pairwise_alltoallv", "ring_alltoallv"):
+            sched = comm_schedules.build_op("alltoallv", algo, n, 0, sizes=m)
+            sched.validate_ranks()
+            assert sched.sizes == flat
+            assert sched.num_chunks == sum(flat)
+            full = RNG.randn(sched.num_chunks, 2)
+            data = _scattered("alltoallv", flat, n, full)
+            out = simulate_collective(sched, data)
+            _assert_converged("alltoallv", sched, flat, n, out, full)
+            out2 = simulate_lowered(lower_schedule(sched), _scattered("alltoallv", flat, n, full))
+            for r in range(n):
+                np.testing.assert_array_equal(out[r], out2[r])
+
+
+def test_ragged_lane_partition_uniform_height():
+    """Every ppermute lane in a ragged round moves a single uniform height —
+    the invariant that keeps the unrolled executor's static slices valid."""
+    for sched in (
+        comm_schedules.ring_allgatherv(4, (3, 1, 0, 2)),
+        comm_schedules.ring_alltoallv(4, ((0, 3, 1, 0), (2, 0, 0, 4), (1, 1, 0, 1), (5, 0, 2, 0))),
+        comm_schedules.pairwise_alltoallv(3, ((1, 2, 0), (0, 1, 3), (2, 0, 1))),
+    ):
+        for rnd in sched.rounds:
+            for lane in lane_partition(rnd.transfers):
+                heights = {t.chunk_count for t in lane}
+                assert len(heights) == 1, (sched.name, heights)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_wire_accounting_matches_closed_forms(n):
+    row = 512
+    for sizes in GATHERV_CASES[n]:
+        M = sum(sizes) * row
+        for algo in ("ring_allgatherv", "doubling_allgatherv"):
+            if algo == "doubling_allgatherv" and n & (n - 1):
+                continue
+            plan = plan_collective("allgatherv", M, n, algo=algo, sizes=sizes)
+            assert plan.wire_bytes() == expected_wire_bytes(
+                "allgatherv", algo, M, n, sizes=plan.sizes
+            ), (algo, sizes)
+    for m in _a2av_cases(n):
+        flat = tuple(v for row_ in m for v in row_)
+        M = sum(flat) * row
+        for algo in ("pairwise_alltoallv", "ring_alltoallv"):
+            plan = plan_collective("alltoallv", M, n, algo=algo, sizes=m)
+            assert plan.wire_bytes() == expected_wire_bytes(
+                "alltoallv", algo, M, n, sizes=plan.sizes
+            ), (algo, m)
+
+
+def test_tuner_skew_inversion():
+    """The skew-aware decision path separates the regimes: bandwidth-bound
+    uniform vectors ride the ring family, latency/skew-bound vectors the
+    doubling family; incast alltoallv matrices pick store-and-forward."""
+    t = Tuner()
+    n = 8
+    # uniform-large allgatherv -> ring (bandwidth-optimal per max-row)
+    big = t.select(64 << 20, n, op="allgatherv", sizes=(64,) * n)
+    assert big.algo == "ring_allgatherv", big
+    # one-hot skew -> doubling (same hop-bytes, log2 startups)
+    hot = t.select(64 << 20, n, op="allgatherv", sizes=(512,) + (0,) * (n - 1))
+    assert hot.algo == "doubling_allgatherv", hot
+    # tiny uniform -> doubling (latency-bound)
+    small = t.select(1 << 10, n, op="allgatherv", sizes=(1,) * n)
+    assert small.algo == "doubling_allgatherv", small
+    # uniform alltoallv -> pairwise; incast -> store-and-forward ring
+    uni = tuple(tuple(8 for _ in range(n)) for _ in range(n))
+    assert t.select(1 << 20, n, op="alltoallv", sizes=uni).algo == "pairwise_alltoallv"
+    incast = tuple(tuple(64 if d == 0 else 1 for d in range(n)) for _ in range(n))
+    assert t.select(1 << 20, n, op="alltoallv", sizes=incast).algo == "ring_alltoallv"
+    # non-pow2 ranks never route to doubling
+    assert t.select(1 << 20, 6, op="allgatherv", sizes=(1, 0, 3, 2, 0, 1)).algo == "ring_allgatherv"
+    # sizes= on a non-ragged op is a hard error, not a silent ignore
+    with pytest.raises(ValueError):
+        t.select(1 << 20, n, op="allgather", sizes=(1,) * n)
+
+
+def test_skew_bucketed_empirical_keys():
+    """Empirical records separate by skew bucket: a measurement recorded for
+    a uniform vector must not answer for a heavily skewed one."""
+    t = Tuner()
+    n, M = 4, 1 << 20
+    uniform = (8, 8, 8, 8)
+    skewed = (29, 1, 1, 1)
+    t.record(M, n, "ring_allgatherv", sum(uniform), 1e-9, op="allgatherv", sizes=uniform)
+    hit = t.select(M, n, op="allgatherv", sizes=uniform)
+    assert hit.source == "empirical" and hit.algo == "ring_allgatherv"
+    miss = t.select(M, n, op="allgatherv", sizes=skewed)
+    assert miss.source == "analytic", miss
+    assert round(np.log2(skew_ratio(skewed))) >= 1
+
+
+def test_plan_cache_keys_on_size_vector():
+    plan_cache_clear()
+    a = plan_cached("allgatherv", 1 << 16, 4, sizes=(3, 1, 0, 2))
+    b = plan_cached("allgatherv", 1 << 16, 4, sizes=(2, 2, 1, 1))
+    c = plan_cached("allgatherv", 1 << 16, 4, sizes=(3, 1, 0, 2))
+    assert a is c and a is not b
+    # matrix and flat forms of the same alltoallv sizes share one plan
+    m = ((1, 2), (3, 4))
+    d = plan_cached("alltoallv", 1 << 16, 2, sizes=m)
+    e = plan_cached("alltoallv", 1 << 16, 2, sizes=(1, 2, 3, 4))
+    assert d is e
+
+
+def test_schedule_sizes_validation():
+    with pytest.raises(ValueError):
+        comm_schedules.ring_allgatherv(4, (1, 2, 3))      # wrong length
+    with pytest.raises(ValueError):
+        comm_schedules.ring_allgatherv(4, (1, -2, 3, 4))  # negative
+    with pytest.raises(ValueError):
+        comm_schedules.doubling_allgatherv(6, (1,) * 6)   # non-pow2
+    sched = comm_schedules.ring_allgatherv(4, (3, 1, 0, 2))
+    sched.validate_ranks()  # sizes vector is checked against num_chunks
+
+
+def test_committed_ragged_table_loads():
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments", "ragged_table.json")
+    table = load_ragged_table(path)
+    assert table, "committed ragged table must be non-empty"
+    for key, entry in table.items():
+        assert entry.get("dryrun") is True, f"{key}: committed entries are simulator stand-ins"
+
+
+def test_ragged_table_rejects_accounting_drift(tmp_path):
+    sizes = [3, 1, 0, 2]
+    row = 512
+    M = sum(sizes) * row
+    wire = int(expected_wire_bytes("allgatherv", "ring_allgatherv", M, 4, sizes=tuple(sizes)))
+    sched = comm_schedules.ring_allgatherv(4, tuple(sizes))
+    good = {
+        "allgatherv/ring_allgatherv/n4/t": {
+            "sizes": sizes, "row_bytes": row, "wire_bytes": wire,
+            "predicted_us": 1.0, "rounds": len(sched.rounds),
+        }
+    }
+    p = tmp_path / "ragged.json"
+    p.write_text(json.dumps(good))
+    load_ragged_table(str(p))
+    # a size vector that disagrees with the recorded wire bytes is rejected
+    bad = json.loads(json.dumps(good))
+    bad["allgatherv/ring_allgatherv/n4/t"]["sizes"] = [2, 2, 1, 0]
+    p.write_text(json.dumps(bad))
+    with pytest.raises(TableSchemaError, match="accounting"):
+        load_ragged_table(str(p))
+    # distribution drift at constant total is caught where the accounting is
+    # distribution-sensitive: alltoallv only wires off-diagonal blocks, so
+    # shifting rows onto the diagonal changes wire bytes at the same sum
+    amat = ((0, 3), (3, 0))
+    aM = 6 * row
+    awire = int(expected_wire_bytes("alltoallv", "pairwise_alltoallv", aM, 2,
+                                    sizes=amat))
+    asched = comm_schedules.pairwise_alltoallv(2, amat)
+    agood = {
+        "alltoallv/pairwise_alltoallv/n2/t": {
+            "sizes": [0, 3, 3, 0], "row_bytes": row, "wire_bytes": awire,
+            "predicted_us": 1.0, "rounds": len(asched.rounds),
+        }
+    }
+    p.write_text(json.dumps(agood))
+    load_ragged_table(str(p))
+    abad = json.loads(json.dumps(agood))
+    abad["alltoallv/pairwise_alltoallv/n2/t"]["sizes"] = [3, 0, 0, 3]
+    p.write_text(json.dumps(abad))
+    with pytest.raises(TableSchemaError, match="accounting"):
+        load_ragged_table(str(p))
+    # wrong round count is rejected too
+    bad2 = json.loads(json.dumps(good))
+    bad2["allgatherv/ring_allgatherv/n4/t"]["rounds"] += 1
+    p.write_text(json.dumps(bad2))
+    with pytest.raises(TableSchemaError, match="rounds"):
+        load_ragged_table(str(p))
+    # all-zero size vectors are rotten
+    bad3 = json.loads(json.dumps(good))
+    bad3["allgatherv/ring_allgatherv/n4/t"]["sizes"] = [0, 0, 0, 0]
+    p.write_text(json.dumps(bad3))
+    with pytest.raises(TableSchemaError):
+        load_ragged_table(str(p))
