@@ -23,7 +23,7 @@ import os
 
 from repro.comm.tables import check_compile_flatness, load_compile_table
 
-from .common import run_worker
+from .common import WorkerTimeoutError, run_worker
 
 RANKS = [8, 16]
 # (op, algo, M, num_chunks sweep) — chain-family points sweep the chunk
@@ -100,12 +100,19 @@ def bench(n, points):
 """
 
 
-def rows(quick: bool = False, dryrun: bool = False):
+def _point_worker(n, pt):
+    return WORKER + f"""
+print(json.dumps(bench({n}, {[pt]!r})))
+"""
+
+
+def rows(quick: bool = False, dryrun: bool = False, timeout: int = 560):
     ranks = RANKS[:1] if (quick or dryrun) else RANKS
     points = [
         (op, algo, M, ks[:2] if dryrun else ks) for op, algo, M, ks in POINTS
     ]
     table = {}
+    timed_out = []
     for n in ranks:
         flat_points = [
             (op, algo, M, k) for op, algo, M, ks in points for k in ks
@@ -113,7 +120,23 @@ def rows(quick: bool = False, dryrun: bool = False):
         worker = WORKER + f"""
 print(json.dumps(bench({n}, {flat_points!r})))
 """
-        table.update(run_worker(worker, devices=n))
+        try:
+            table.update(run_worker(worker, devices=n, timeout=timeout, retries=1))
+        except WorkerTimeoutError:
+            # the whole-rank batch hung twice: re-run one worker PER POINT so
+            # a single pathological point can't take the rest of the sweep
+            # down with it — each point still gets the single retry
+            for pt in flat_points:
+                try:
+                    table.update(
+                        run_worker(
+                            _point_worker(n, pt), devices=n,
+                            timeout=timeout, retries=1,
+                        )
+                    )
+                except WorkerTimeoutError:
+                    op, algo, M, k = pt
+                    timed_out.append((f"n{n}/{op}/{algo}/K{k or n}", M))
     if dryrun:
         for entry in table.values():
             entry["dryrun"] = True
@@ -122,7 +145,17 @@ print(json.dumps(bench({n}, {flat_points!r})))
         json.dump(table, f, indent=1, sort_keys=True)
     table = load_compile_table("experiments/compile_table.json")  # schema gate
     check_compile_flatness(table)  # compile-size regression gate at source
-    out = []
+    # timed-out points are recorded as explicit bench rows (derived.timeout),
+    # NOT written into the schema-gated table — the gates only see measured
+    # entries, and downstream consumers can see exactly which points are gone
+    out = [
+        {
+            "name": f"compile/{key}",
+            "us_per_call": float("nan"),
+            "derived": {"timeout": True, "M": M},
+        }
+        for key, M in timed_out
+    ]
     for key, e in sorted(table.items()):
         out.append(
             {

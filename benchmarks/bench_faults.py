@@ -1,0 +1,230 @@
+"""Fault-injection sweep — the fault-tolerance contract, measured.
+
+For every collective op x fault class x rank count, replay the op's pinned
+schedule in the numpy simulator under a seeded :class:`~repro.comm.FaultSpec`
+and record which side of the correctness contract the replay landed on:
+
+  * ``bit_identical`` — the faulty replay matched the fault-free oracle
+    exactly (slow links, stalled rounds, and in-budget transient drops only
+    stretch the clock; values are untouched). The entry records the
+    baseline vs degraded simulator clock.
+  * ``typed_error`` — a named FaultError subclass fired (dead rank, drop
+    streak past the retry budget). Dead-rank entries additionally carry the
+    degraded replan built by ``plan_cached`` under a :class:`MeshHealth`
+    report: the shrunk mesh size, the re-priced prediction, and the
+    survivor-mesh wire bytes that ``comm.tables.load_fault_table``
+    re-derives from the closed-form accounting.
+
+There is no third outcome — a silent wrong answer makes the sweep raise,
+so it can never be committed as an artifact. Everything here is host-side
+numpy (the same simulator the schedule property tests use); algorithms are
+pinned per op to non-composite choices so wire-byte accounting is exact.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.comm import (
+    DeadRankError,
+    FaultSpec,
+    MeshHealth,
+    load_fault_table,
+    plan_cached,
+)
+from repro.core.simulator import simulate_collective
+
+SEED = 0
+ROW = 1024          # bytes per ragged row
+M_UNIFORM = 1 << 16
+DEAD = 1            # the injected dead rank (never the root)
+
+# non-composite algo per op: reduce_then_bcast has no single-phase
+# closed-form wire accounting (expected_wire_bytes raises on it by design)
+ALGOS = {
+    "bcast": "pipelined_chain",
+    "reduce": "pipelined_reduce_chain",
+    "allreduce": "ring_allreduce",
+    "allgather": "ring_allgather",
+    "reduce_scatter": "ring_reduce_scatter",
+    "allgatherv": "ring_allgatherv",
+    "alltoallv": "pairwise_alltoallv",
+}
+
+
+def _sizes(op, n, rng):
+    if op == "allgatherv":
+        return tuple(int(rng.integers(1, 5)) for _ in range(n))
+    if op == "alltoallv":
+        return tuple(int(rng.integers(1, 4)) for _ in range(n * n))
+    return None
+
+
+def _data(plan, rng):
+    """Per-rank input arrays, same conventions as tests/test_comm_plans.py:
+    uniform ops get dense (num_chunks, 3) payloads; ragged ops get the
+    global row frame with only their own rows valid."""
+    sched = plan.schedule
+    n = sched.n
+    if plan.op in ("allgatherv", "alltoallv"):
+        sz = np.asarray(plan.sizes, dtype=np.int64)
+        full = rng.standard_normal((sched.num_chunks, 3))
+        owner = (
+            np.repeat(np.arange(n), sz)
+            if plan.op == "allgatherv"
+            else np.repeat(np.arange(n * n) // n, sz)
+        )
+        return [np.where((owner == r)[:, None], full, 0.0) for r in range(n)]
+    return [rng.standard_normal((sched.num_chunks, 3)) for _ in range(n)]
+
+
+def _bit_identical(plan, spec, rng):
+    """Replay plan's schedule with and without the fault; return (matches
+    oracle exactly, report). Raises the spec's typed error if it fires."""
+    data = _data(plan, rng)
+    oracle = simulate_collective(plan.schedule, [d.copy() for d in data])
+    report = {}
+    faulty = simulate_collective(
+        plan.schedule, [d.copy() for d in data], faults=spec, report=report
+    )
+    same = all(np.array_equal(a, b) for a, b in zip(oracle, faulty))
+    return same, report
+
+
+def _clock_us(plan, spec=None):
+    return plan.timed_rounds_s(faults=spec) * 1e6
+
+
+def _replan_entry(op, M, n, algo, sizes, health):
+    """Degraded replan through plan_cached — and proof it is NOT the
+    pre-fault plan (the cache keys on the health fingerprint)."""
+    healthy = plan_cached(op, M, n, algo=algo, sizes=sizes)
+    degraded = plan_cached(op, M, n, algo=algo, sizes=sizes, health=health)
+    assert degraded is not healthy, "plan_cached served a pre-fault-mesh plan"
+    assert degraded.n == n - len(health.dead_ranks), degraded.n
+    assert degraded.survivors == health.survivors()
+    rep = {
+        "n": degraded.n,
+        "algo": degraded.algo,
+        "num_chunks": degraded.num_chunks,
+        "M": degraded.M,
+        "wire_bytes": degraded.wire_bytes(),
+        "predicted_us": degraded.predicted_s * 1e6,
+        "survivors": list(degraded.survivors),
+    }
+    if degraded.sizes is not None:
+        rep["sizes"] = list(degraded.sizes)
+    return rep
+
+
+def sweep(ns, *, dryrun: bool = False) -> dict:
+    table = {}
+    for n in ns:
+        for oi, (op, algo) in enumerate(ALGOS.items()):
+            # stable stream per (n, op) — str hash is salted per process and
+            # would make the committed ragged sizes irreproducible
+            rng = np.random.default_rng((SEED, n, oi))
+            sizes = _sizes(op, n, rng)
+            M = M_UNIFORM if sizes is None else ROW * sum(sizes)
+            plan = plan_cached(op, M, n, algo=algo, sizes=sizes)
+            base_us = _clock_us(plan)
+            common = {"algo": plan.algo, "seed": SEED}
+
+            # slow link / stalled round: clock-only faults
+            for fault, spec in (
+                ("slow_link", FaultSpec(seed=SEED, link_slowdown=(((0, 1), 4.0),))),
+                ("stalled_round", FaultSpec(seed=SEED, stalled_rounds=(0,), stall_s=5e-3)),
+            ):
+                same, _ = _bit_identical(plan, spec, rng)
+                assert same, f"{op}/{fault}/n{n}: faulty replay diverged from oracle"
+                faulty_us = _clock_us(plan, spec)
+                assert faulty_us >= base_us, (op, fault, n)
+                table[f"{op}/{fault}/n{n}"] = {
+                    **common,
+                    "outcome": "bit_identical",
+                    "baseline_us": base_us,
+                    "faulty_us": faulty_us,
+                    "fault": "0->1 at 4x" if fault == "slow_link" else "round 0 +5ms",
+                }
+
+            # transient drops: retransmits inside the round, values identical
+            spec = FaultSpec(seed=SEED, drop_prob=0.25, max_drop_retries=8)
+            same, report = _bit_identical(plan, spec, rng)
+            assert same, f"{op}/transient_drop/n{n}: retransmit changed values"
+            table[f"{op}/transient_drop/n{n}"] = {
+                **common,
+                "outcome": "bit_identical",
+                "baseline_us": base_us,
+                "faulty_us": _clock_us(plan, spec),
+                "retries": int(report["retries"]),
+                "fault": "drop_prob=0.25, budget 8",
+            }
+
+            # dead rank: typed error + degraded replan on the survivors
+            spec = FaultSpec(seed=SEED, dead_ranks=(DEAD,))
+            try:
+                _bit_identical(plan, spec, rng)
+            except DeadRankError:
+                pass
+            else:
+                raise AssertionError(
+                    f"{op}/dead_rank/n{n}: schedule replayed through a dead rank"
+                )
+            health = MeshHealth(n=n, dead_ranks=(DEAD,))
+            table[f"{op}/dead_rank/n{n}"] = {
+                **common,
+                "outcome": "typed_error",
+                "error": "DeadRankError",
+                "dead_rank": DEAD,
+                "replanned": _replan_entry(op, M, n, algo, sizes, health),
+            }
+    if dryrun:
+        for entry in table.values():
+            entry["dryrun"] = True
+    return table
+
+
+def rows(quick: bool = False, dryrun: bool = False):
+    ns = [4] if (quick or dryrun) else [4, 8]
+    table = sweep(ns, dryrun=dryrun)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/fault_table.json", "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+    table = load_fault_table("experiments/fault_table.json")  # schema gate
+    out = []
+    for key, e in sorted(table.items()):
+        derived = {"outcome": e["outcome"], "algo": e["algo"]}
+        if e["outcome"] == "bit_identical":
+            derived["slowdown"] = (
+                e["faulty_us"] / e["baseline_us"] if e["baseline_us"] else 1.0
+            )
+            if "retries" in e:
+                derived["retries"] = e["retries"]
+        else:
+            derived["error"] = e["error"]
+            if "replanned" in e:
+                derived["replanned_n"] = e["replanned"]["n"]
+                derived["replanned_us"] = e["replanned"]["predicted_us"]
+        if e.get("dryrun"):
+            derived["dryrun"] = True
+        out.append(
+            {
+                "name": f"faults/{key}",
+                "us_per_call": e.get("faulty_us", 0.0),
+                "derived": derived,
+            }
+        )
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for r in rows(quick=not args.full, dryrun=args.dryrun):
+        print(r["name"], f"{r['us_per_call']:.1f}", json.dumps(r["derived"]))

@@ -15,22 +15,42 @@ import sys
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def run_worker(code: str, devices: int, timeout: int = 560) -> dict:
+class WorkerTimeoutError(RuntimeError):
+    """A bench subprocess exceeded its wall-clock budget on every attempt.
+
+    Raised instead of the raw ``subprocess.TimeoutExpired`` so suites can
+    catch it and record the point as timed out (``derived.timeout=true``)
+    rather than dropping it silently or crashing the whole sweep."""
+
+
+def run_worker(code: str, devices: int, timeout: int = 560, retries: int = 0) -> dict:
     pre = (
         "import os\n"
         f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
         f"import sys; sys.path.insert(0, {SRC!r})\n"
     )
-    proc = subprocess.run(
-        [sys.executable, "-c", pre + code],
-        capture_output=True,
-        text=True,
-        timeout=timeout,
-    )
-    if proc.returncode != 0:
-        raise RuntimeError(f"bench worker failed:\n{proc.stderr[-3000:]}")
-    # last line is the JSON payload
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    last = None
+    for attempt in range(retries + 1):
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-c", pre + code],
+                capture_output=True,
+                text=True,
+                timeout=timeout,
+            )
+        except subprocess.TimeoutExpired as e:
+            # a hung worker gets one more honest shot (transient host load);
+            # a reproducible hang surfaces as the typed error below
+            last = e
+            continue
+        if proc.returncode != 0:
+            raise RuntimeError(f"bench worker failed:\n{proc.stderr[-3000:]}")
+        # last line is the JSON payload
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+    raise WorkerTimeoutError(
+        f"bench worker timed out after {timeout}s on {retries + 1} attempt(s) "
+        f"(devices={devices})"
+    ) from last
 
 
 MEASURE_SNIPPET = """

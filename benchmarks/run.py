@@ -8,6 +8,7 @@
   overlap: bucket-streamed sync, planned vs simulated   (comm.overlap)
   compile: unrolled-vs-compiled executor program size   (comm.executors)
   ragged: allgatherv/alltoallv skew-regime sweep        (comm ragged ops)
+  faults: fault-injection contract sweep                (comm.faults)
 
 Prints ``name,us_per_call,derived`` CSV; also writes experiments/bench.json
 (and the tuner/allreduce suites their experiments/*_table.json artifacts —
@@ -37,6 +38,7 @@ def main() -> None:
     from . import (
         bench_allreduce,
         bench_compile,
+        bench_faults,
         bench_internode,
         bench_intranode,
         bench_overlap,
@@ -51,6 +53,7 @@ def main() -> None:
         "overlap": bench_overlap.rows,
         "compile": bench_compile.rows,
         "ragged": bench_ragged.rows,
+        "faults": bench_faults.rows,
         "fig1": bench_intranode.rows,
         "fig2": bench_internode.rows,
         "fig3": bench_vgg_cntk.rows,

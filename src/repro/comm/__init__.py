@@ -21,6 +21,7 @@ Consumers: ``train.train_step`` (sync_mode='tuned_allreduce'),
 from ..core.tuner import OPS, Decision, Tuner, default_tuner
 from .api import (
     apply_plan,
+    apply_plan_resilient,
     hierarchical_allreduce_axes,
     pallgather,
     pallgatherv,
@@ -33,6 +34,15 @@ from .api import (
     preduce_scatter,
 )
 from .executors import execute_collective, execute_compiled
+from .faults import (
+    DeadRankError,
+    FallbackExhaustedError,
+    FaultError,
+    FaultSpec,
+    MeshHealth,
+    TransientDropError,
+    WeightSyncError,
+)
 from .overlap import (
     OverlapPlan,
     execute_overlap,
@@ -48,11 +58,14 @@ from .plan import (
     plan_cache_info,
     plan_cached,
     plan_collective,
+    plan_degraded,
 )
+from .resilience import FallbackEvent, FallbackPolicy, StragglerReport, Watchdog
 from .tables import (
     TableSchemaError,
     load_bench,
     load_compile_table,
+    load_fault_table,
     load_overlap_table,
     load_tuner_table,
     tuner_from_table,
@@ -65,6 +78,7 @@ __all__ = [
     "default_tuner",
     "CollectivePlan",
     "plan_collective",
+    "plan_degraded",
     "plan_cached",
     "plan_cache_info",
     "plan_cache_clear",
@@ -73,6 +87,7 @@ __all__ = [
     "execute_collective",
     "execute_compiled",
     "apply_plan",
+    "apply_plan_resilient",
     "pbcast",
     "pbcast_tree",
     "preduce",
@@ -93,5 +108,17 @@ __all__ = [
     "load_bench",
     "load_overlap_table",
     "load_compile_table",
+    "load_fault_table",
     "tuner_from_table",
+    "FaultError",
+    "DeadRankError",
+    "TransientDropError",
+    "FallbackExhaustedError",
+    "WeightSyncError",
+    "FaultSpec",
+    "MeshHealth",
+    "FallbackPolicy",
+    "FallbackEvent",
+    "StragglerReport",
+    "Watchdog",
 ]

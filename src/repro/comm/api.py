@@ -26,6 +26,7 @@ from .schedules import alltoallv_matrix
 
 __all__ = [
     "apply_plan",
+    "apply_plan_resilient",
     "pbcast",
     "pbcast_tree",
     "preduce",
@@ -299,6 +300,94 @@ def apply_plan(
     buf, pad = _chunked(flat, sched.num_chunks, combiner=combiner)
     out = run(sched, buf, axis_name)
     return _unchunked(out, pad, x.shape, x.dtype)
+
+
+def _one_shot_fallback(plan: CollectivePlan, x: jax.Array, axis_name) -> jax.Array:
+    """Terminal fallback stage: implement the plan's op with a single native
+    XLA collective, bypassing the schedule executors entirely. Output
+    shape/dtype contracts match :func:`apply_plan`. The ragged ops have no
+    native one-shot (variable per-rank shapes) — they raise, and the chain
+    reports them as exhausted."""
+    op = plan.op
+    if op == "bcast":
+        return algorithms.xla_psum_bcast(x, axis_name, root=plan.root)
+    if op in ("reduce", "allreduce"):
+        return lax.psum(x, axis_name)
+    if op == "allgather":
+        return lax.all_gather(x, axis_name, axis=0)
+    if op == "reduce_scatter":
+        buf, _pad = _chunked(lax.psum(jnp.ravel(x), axis_name), plan.n, combiner="sum")
+        return lax.dynamic_slice(buf, (lax.axis_index(axis_name), 0), (1, buf.shape[1]))[0]
+    raise RuntimeError(f"no XLA one-shot collective implements ragged op {op!r}")
+
+
+def apply_plan_resilient(
+    plan: CollectivePlan,
+    x: jax.Array,
+    axis_name,
+    *,
+    policy=None,
+    watchdog=None,
+    fused: bool = True,
+    on_event=None,
+) -> jax.Array:
+    """:func:`apply_plan` behind a typed fallback chain.
+
+    Walks ``policy.chain`` (default compiled -> unrolled -> XLA one-shot)
+    with per-stage retries and exponential backoff; the first stage that
+    completes wins. Typed :class:`~.faults.FaultError`\\ s propagate
+    immediately (they are diagnoses with recovery actions, not transient
+    failures); any other exception burns a retry and then degrades the
+    chain. A completed attempt slower than ``policy.timeout_s`` still
+    returns its result but is flagged as a straggler — to the optional
+    ``watchdog`` (which can land it in ``Tuner.record``) and the optional
+    ``on_event`` callback. All stages failing raises
+    :class:`~.faults.FallbackExhaustedError` naming every cause.
+
+    Note: the timings observed here wrap trace + dispatch of the collective
+    from the host's perspective, which is what a host-side watchdog can see;
+    device-accurate straggler attribution comes from the benchmark harness
+    feeding :meth:`Watchdog.observe` with measured times.
+    """
+    import time as _time
+
+    from .faults import FallbackExhaustedError, FaultError
+    from .resilience import FallbackEvent, FallbackPolicy
+
+    policy = policy or FallbackPolicy()
+    causes: list[str] = []
+    for stage in policy.chain:
+        delay = policy.backoff_s
+        for attempt in range(policy.max_retries + 1):
+            t0 = _time.perf_counter()
+            try:
+                if stage == "xla":
+                    out = _one_shot_fallback(plan, x, axis_name)
+                else:
+                    out = apply_plan(plan, x, axis_name, fused=fused,
+                                     compiled=(stage == "compiled"))
+            except FaultError:
+                raise
+            except Exception as e:  # noqa: BLE001 — the chain is the handler
+                dt = _time.perf_counter() - t0
+                causes.append(f"{stage}[{attempt}]: {type(e).__name__}: {e}")
+                if on_event is not None:
+                    on_event(FallbackEvent(stage, attempt, "error", dt, repr(e)))
+                if attempt < policy.max_retries:
+                    _time.sleep(delay)
+                    delay *= policy.backoff_mult
+                continue
+            dt = _time.perf_counter() - t0
+            straggled = policy.timeout_s is not None and dt > policy.timeout_s
+            if on_event is not None:
+                on_event(FallbackEvent(stage, attempt, "straggler" if straggled else "ok", dt))
+            if watchdog is not None:
+                watchdog.observe(plan, dt)
+            return out
+    raise FallbackExhaustedError(
+        f"every fallback stage failed for {plan.op}/{plan.algo} "
+        f"(M={plan.M}, n={plan.n}): " + "; ".join(causes)
+    )
 
 
 # ---------------------------------------------------------------------------

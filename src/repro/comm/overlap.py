@@ -188,7 +188,7 @@ def plan_overlap(
 
 
 def simulate_overlap(
-    oplan: OverlapPlan, hw: cost_model.Hardware | None = None
+    oplan: OverlapPlan, hw: cost_model.Hardware | None = None, faults=None
 ) -> dict:
     """Discrete-round replay of the overlapped timeline vs the barrier one.
 
@@ -206,21 +206,33 @@ def simulate_overlap(
     guaranteed invariant (tested): for >= 2 non-empty buckets the overlapped
     schedule has STRICTLY fewer network-idle rounds than the barrier one —
     the network starts on bucket 0 while later buckets are still computing.
+
+    With ``faults`` (a :class:`comm.faults.FaultSpec`), every bucket's clock
+    runs through the degraded ``timed_rounds`` (slow links, retransmit
+    inflation, stalls) — the round *structure* is untouched, so the idle
+    accounting stays comparable and the extra keys (``comm_s_healthy`` /
+    ``comm_s_faulty`` / ``fault_slowdown``) quantify the degradation. Dead
+    ranks raise ``DeadRankError`` from the first bucket's replay.
     """
     hw = hw or cost_model.TPU_V5E
     rounds = []
     times = []
+    healthy_times = []
     for k in oplan.order:
         r = 0
         t = 0.0
+        t0 = 0.0
         for ax in oplan.axes:
             p = oplan.plans[ax][k]
             r += p.schedule.num_rounds if p.schedule is not None else (
                 0 if p.algo == "noop" else 1
             )
-            t += p.timed_rounds_s(hw) if p.schedule is not None else 0.0
+            if p.schedule is not None:
+                t0 += p.timed_rounds_s(hw)
+                t += p.timed_rounds_s(hw, faults=faults) if faults is not None else 0.0
         rounds.append(max(r, 1))
-        times.append(t)
+        times.append(t if faults is not None else t0)
+        healthy_times.append(t0)
     K = len(rounds)
     total_comm_rounds = sum(rounds)
     mean_round_s = (sum(times) / total_comm_rounds) if total_comm_rounds else hw.ts
@@ -250,7 +262,7 @@ def simulate_overlap(
     overlap_span = comm_end[-1] if K else 0
     overlap_idle = overlap_span - total_comm_rounds
 
-    return {
+    out = {
         "num_buckets": K,
         "overlap_depth": depth,
         "comm_rounds": total_comm_rounds,
@@ -264,6 +276,14 @@ def simulate_overlap(
         "efficiency": oplan.efficiency(hw),
         "wire_bytes": oplan.wire_bytes(),
     }
+    if faults is not None:
+        healthy = sum(healthy_times)
+        faulty = sum(times)
+        out["comm_s_healthy"] = healthy
+        out["comm_s_faulty"] = faulty
+        out["fault_slowdown"] = faulty / healthy if healthy > 0 else 1.0
+        out["fault_fingerprint"] = faults.fingerprint()
+    return out
 
 
 # ---------------------------------------------------------------------------

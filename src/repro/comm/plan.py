@@ -20,6 +20,7 @@ from . import schedules as comm_schedules
 __all__ = [
     "CollectivePlan",
     "plan_collective",
+    "plan_degraded",
     "plan_cached",
     "plan_cache_info",
     "plan_cache_clear",
@@ -87,6 +88,10 @@ class CollectivePlan:
     # per (src, dst) block row-major for alltoallv); None for uniform ops.
     # M == sum(sizes) * row_bytes, so wire accounting stays exact.
     sizes: tuple[int, ...] | None = None
+    # degraded-mesh plans: survivors[i] is the PHYSICAL rank that plays
+    # logical rank i of this plan's shrunk schedule (n == len(survivors)).
+    # None for plans built on the full mesh.
+    survivors: tuple[int, ...] | None = None
 
     @property
     def algo(self) -> str:
@@ -119,15 +124,19 @@ class CollectivePlan:
         per schedule in ``core.schedules.lower_schedule``)."""
         return None if self.schedule is None else lower_schedule(self.schedule)
 
-    def timed_rounds_s(self, hw: cost_model.Hardware | None = None) -> float:
-        """Round-accurate simulator clock for this plan's schedule."""
+    def timed_rounds_s(self, hw: cost_model.Hardware | None = None, faults=None) -> float:
+        """Round-accurate simulator clock for this plan's schedule; with a
+        :class:`comm.faults.FaultSpec` the clock degrades (slow links, retry
+        inflation, stalls) exactly as ``core.simulator.timed_rounds`` does."""
         from ..core.simulator import timed_rounds
 
         if self.schedule is None:
             return 0.0
         hw = hw or cost_model.TPU_V5E
         chunk_bytes = math.ceil(self.M / max(self.schedule.num_chunks, 1))
-        return timed_rounds(self.schedule, chunk_bytes, hw.ts, hw.path_bw(self.inter_pod))
+        return timed_rounds(
+            self.schedule, chunk_bytes, hw.ts, hw.path_bw(self.inter_pod), faults=faults
+        )
 
 
 def decide(
@@ -244,6 +253,105 @@ def plan_collective(
     return CollectivePlan(op, M, n, root, inter_pod, dec, sched, sizes)
 
 
+def _reprice_degraded(dec, op, M, n, t, inter_pod, sizes, slow_links):
+    """Re-price a resolved decision under a degraded-link report via
+    ``cost_model.cost_degraded`` — the same kw construction as the manual
+    branch of :func:`decide`, evaluated at the degraded bandwidth."""
+    algo = dec.algo
+    if not slow_links or algo not in cost_model.ALGO_COSTS:
+        return dec
+    kw = {"C": float(dec.chunk_bytes)} if algo in _CHAIN_ALGOS else {}
+    if algo == "reduce_then_bcast":
+        inner = t.select(M, n, op="bcast", inter_pod=inter_pod)
+        # conservative: scale the whole inner bcast by the worst factor
+        # (the closed form would only scale its bandwidth term)
+        kw = {"t_bcast": inner.predicted_s * cost_model.worst_link_factor(slow_links)}
+    elif algo in _RAGGED_ALGOS and sizes is not None and sum(sizes) > 0:
+        row_bytes = M / sum(sizes)
+        kw = {"sizes": [s * row_bytes for s in sizes]}
+    predicted = cost_model.cost_degraded(
+        algo, M, n, t.hw, inter_pod=inter_pod, slow_links=slow_links, **kw
+    )
+    return dataclasses.replace(dec, predicted_s=predicted, source=dec.source + "+degraded")
+
+
+def plan_degraded(
+    op: str,
+    M: int,
+    n: int,
+    health,
+    *,
+    root: int = 0,
+    algo: str = "auto",
+    num_chunks: int | None = None,
+    tuner: Tuner | None = None,
+    inter_pod: bool = False,
+    sizes=None,
+) -> CollectivePlan:
+    """Replan one collective for a degraded mesh (:class:`comm.faults.MeshHealth`).
+
+    Dead ranks shrink the mesh: the schedule is rebuilt from scratch on the
+    ``n' = len(survivors)`` surviving ranks (rings/chains/trees simply omit
+    the dead rank — the builders know nothing about the old mesh), the
+    global row frame is remapped (allgather shards and ragged size vectors
+    drop the dead ranks' segments), and ``plan.survivors`` records the
+    logical-to-physical rank map. Slow links leave the schedule alone but
+    re-price the decision through ``cost_model.cost_degraded``, so reports
+    and the overlap tuner see the degraded clock.
+
+    Typed failures: a dead root on bcast/reduce raises
+    :class:`~..comm.faults.DeadRankError` (the data source is gone — only a
+    checkpoint restore can recover), as does an empty survivor set.
+    """
+    from .faults import DeadRankError
+
+    if health.n != n:
+        raise ValueError(f"health report is for n={health.n}, plan asked n={n}")
+    if health.healthy:
+        return plan_collective(op, M, n, root=root, algo=algo, num_chunks=num_chunks,
+                               tuner=tuner, inter_pod=inter_pod, sizes=sizes)
+    t = tuner or default_tuner()
+    sizes = _norm_sizes(op, sizes, n)
+    survivors = health.survivors()
+    slow = health.surviving_slow_links()
+    if not health.dead_ranks:
+        # slow links only: same mesh, same schedule, degraded pricing
+        plan = plan_collective(op, M, n, root=root, algo=algo, num_chunks=num_chunks,
+                               tuner=t, inter_pod=inter_pod, sizes=sizes)
+        dec = _reprice_degraded(plan.decision, op, M, n, t, inter_pod, sizes, slow)
+        return dataclasses.replace(plan, decision=dec)
+    if len(survivors) == 0:
+        raise DeadRankError(f"no surviving ranks in health report for n={n}")
+    dead = set(health.dead_ranks)
+    if root in dead:
+        if op in ("bcast", "reduce"):
+            raise DeadRankError(
+                f"{op} root {root} is dead; its payload is unrecoverable from the "
+                f"mesh — restore from checkpoint and replan with a live root"
+            )
+        new_root = 0
+    else:
+        new_root = survivors.index(root)
+    n2 = len(survivors)
+    # remap the global frame onto the survivor mesh
+    sizes2 = None
+    if op in RAGGED_OPS:
+        sizes2 = comm_schedules.shrink_sizes(op, sizes, survivors)
+        M2 = int(round(M / max(sum(sizes), 1) * sum(sizes2))) if sum(sizes) else 0
+    elif op == "allgather":
+        M2 = (M // n) * n2  # the dead ranks' shards leave the gathered frame
+    else:
+        M2 = M  # bcast/reduce/allreduce/reduce_scatter keep the full payload
+    # remap surviving slow links into the survivor index space so degraded
+    # pricing and any fault replay on the shrunk schedule line up
+    pos = {r: i for i, r in enumerate(survivors)}
+    slow2 = tuple(((pos[s], pos[d]), f) for (s, d), f in slow)
+    plan = plan_collective(op, M2, n2, root=new_root, algo=algo, num_chunks=num_chunks,
+                           tuner=t, inter_pod=inter_pod, sizes=sizes2)
+    dec = _reprice_degraded(plan.decision, op, M2, n2, t, inter_pod, plan.sizes, slow2)
+    return dataclasses.replace(plan, decision=dec, survivors=survivors)
+
+
 # ---------------------------------------------------------------------------
 # host-side plan cache
 #
@@ -271,16 +379,23 @@ def plan_cached(
     tuner: Tuner | None = None,
     inter_pod: bool = False,
     sizes=None,
+    health=None,
 ) -> CollectivePlan:
     """LRU-cached :func:`plan_collective`. Key: (op, M, n, root, algo,
-    num_chunks, inter_pod, sizes vector, tuner fingerprint). The buffer
-    dtype is already folded into ``M`` (a byte count), so same-point calls
-    from different dtypes correctly share one plan; ragged plans for
-    different size vectors never collide (the canonical flat vector is in
-    the key). Plans are frozen and their schedules immutable, so sharing
-    the object across callers (and across traced programs) is safe; the
-    pre-lowered round tables ride along via ``CollectivePlan.lowered()``'s
-    own cache."""
+    num_chunks, inter_pod, sizes vector, tuner fingerprint, health
+    fingerprint). The buffer dtype is already folded into ``M`` (a byte
+    count), so same-point calls from different dtypes correctly share one
+    plan; ragged plans for different size vectors never collide (the
+    canonical flat vector is in the key). Plans are frozen and their
+    schedules immutable, so sharing the object across callers (and across
+    traced programs) is safe; the pre-lowered round tables ride along via
+    ``CollectivePlan.lowered()``'s own cache.
+
+    ``health`` (a :class:`comm.faults.MeshHealth`) routes degraded meshes
+    through :func:`plan_degraded`; its content fingerprint sits in the key
+    beside the tuner fingerprint, so a health transition (a rank dying, a
+    link degrading or recovering) can never serve a plan built for the
+    pre-fault mesh."""
     t = tuner or default_tuner()
     sizes = _norm_sizes(op, sizes, n)
     key = (
@@ -293,6 +408,7 @@ def plan_cached(
         bool(inter_pod),
         sizes,
         t.fingerprint(),
+        None if health is None else health.fingerprint(),
     )
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
@@ -300,10 +416,16 @@ def plan_cached(
         _PLAN_CACHE_STATS["hits"] += 1
         return plan
     _PLAN_CACHE_STATS["misses"] += 1
-    plan = plan_collective(
-        op, M, n, root=root, algo=algo, num_chunks=num_chunks, tuner=t,
-        inter_pod=inter_pod, sizes=sizes,
-    )
+    if health is not None and not health.healthy:
+        plan = plan_degraded(
+            op, M, n, health, root=root, algo=algo, num_chunks=num_chunks,
+            tuner=t, inter_pod=inter_pod, sizes=sizes,
+        )
+    else:
+        plan = plan_collective(
+            op, M, n, root=root, algo=algo, num_chunks=num_chunks, tuner=t,
+            inter_pod=inter_pod, sizes=sizes,
+        )
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
         _PLAN_CACHE.popitem(last=False)

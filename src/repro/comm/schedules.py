@@ -55,6 +55,7 @@ __all__ = [
     "ring_reduce_scatter",
     "ragged_offsets",
     "alltoallv_matrix",
+    "shrink_sizes",
     "ring_allgatherv",
     "doubling_allgatherv",
     "pairwise_alltoallv",
@@ -264,6 +265,31 @@ def alltoallv_matrix(sizes, n: int) -> tuple[tuple[int, ...], ...]:
         flat = tuple(int(v) for v in sizes)
         return tuple(flat[s * n:(s + 1) * n] for s in range(n))
     raise ValueError(f"alltoallv sizes must have n, n*n, or matrix shape; got {len(sizes)}")
+
+
+def shrink_sizes(op: str, sizes, survivors) -> tuple[int, ...]:
+    """Remap a ragged size vector onto a survivor mesh: the dead ranks'
+    segments (allgatherv) or source rows AND destination columns (alltoallv)
+    drop out of the global row frame. ``survivors`` lists physical ranks in
+    ascending order; the result is indexed by the survivor-mesh logical
+    rank. Flat tuples in, flat tuple out (alltoallv row-major)."""
+    surv = tuple(int(r) for r in survivors)
+    sizes = tuple(sizes)
+    if op == "allgatherv":
+        return tuple(int(sizes[r]) for r in surv)
+    if op != "alltoallv":
+        raise ValueError(f"shrink_sizes is for ragged ops, not {op!r}")
+    if sizes and isinstance(sizes[0], (tuple, list)):
+        n = len(sizes)
+    else:
+        n = int(round(len(sizes) ** 0.5))
+        if n * n != len(sizes):
+            raise ValueError(
+                f"alltoallv sizes must be an n x n matrix or flat n*n vector, "
+                f"got length {len(sizes)}"
+            )
+    m = alltoallv_matrix(sizes, n)
+    return tuple(int(m[s][d]) for s in surv for d in surv)
 
 
 def ring_allgatherv(n: int, sizes, root: int = 0) -> Schedule:

@@ -495,3 +495,46 @@ def cost(algo: str, M: float, n: int, hw: Hardware = TPU_V5E, *, inter_pod: bool
     """Predicted latency (s) of ``algo`` for an M-byte bcast over n ranks."""
     B = hw.path_bw(inter_pod)
     return ALGO_COSTS[algo](M, n, hw, B, **kw)
+
+
+def worst_link_factor(slow_links) -> float:
+    """Worst per-link slowdown factor in a health report (>= 1.0).
+
+    ``slow_links`` is a {(src, dst): factor} mapping or an iterable of
+    ((src, dst), factor) pairs — the same shape ``comm.faults`` carries.
+    Every schedule the planner emits serializes rounds, so the whole
+    collective is gated by its slowest active link: the bandwidth term of a
+    closed-form cost degrades by exactly this factor (startup terms are
+    latency-bound and unaffected).
+    """
+    items = list(slow_links.values()) if isinstance(slow_links, dict) else [
+        f for _pair, f in slow_links
+    ]
+    if not items:
+        return 1.0
+    return max(1.0, max(float(f) for f in items))
+
+
+def degraded_bandwidth(B: float, slow_links) -> float:
+    """Effective per-link bandwidth once the worst reported slowdown gates
+    the round clock."""
+    return B / worst_link_factor(slow_links)
+
+
+def cost_degraded(
+    algo: str,
+    M: float,
+    n: int,
+    hw: Hardware = TPU_V5E,
+    *,
+    inter_pod: bool = False,
+    slow_links=(),
+    **kw,
+) -> float:
+    """:func:`cost` under a degraded-link health report: the same closed
+    form, evaluated at :func:`degraded_bandwidth`. With an empty report this
+    is exactly ``cost`` — the degraded path prices the healthy mesh
+    identically, so replanning on a health transition can only re-rank
+    algorithms for a reason."""
+    B = degraded_bandwidth(hw.path_bw(inter_pod), slow_links)
+    return ALGO_COSTS[algo](M, n, hw, B, **kw)

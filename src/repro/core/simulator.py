@@ -72,34 +72,65 @@ def simulate_reduce(schedule: Schedule, data: Sequence[np.ndarray]) -> list[np.n
     return bufs
 
 
-def simulate_collective(schedule: Schedule, data: Sequence[np.ndarray]) -> list[np.ndarray]:
+def simulate_collective(
+    schedule: Schedule,
+    data: Sequence[np.ndarray],
+    faults=None,
+    report: dict | None = None,
+) -> list[np.ndarray]:
     """Value-level replay of ANY schedule (bcast/reduce/allreduce/allgather/
     reduce_scatter): every transfer reads the sender's buffer as it was at
     the *start* of the round (concurrent semantics), and either overwrites
     the destination chunk range or — for ``combine=True`` transfers —
     accumulates into it.
 
+    ``faults`` (a :class:`comm.faults.FaultSpec`, duck-typed) replays the
+    same schedule under injected faults. Dead ranks raise
+    ``DeadRankError`` before any round runs; transient drops are link-layer
+    retransmits of the round-start payload, so the final values are
+    bit-identical to the fault-free replay unless the retry budget is
+    exceeded (``TransientDropError``). Slow links and stalls are clock-only
+    faults — :func:`timed_rounds` accounts for them; values never change.
+    ``report`` (optional dict) is filled with retry/stall counters.
+
     Correctness (including causality and double-counting) is checked by the
     property tests comparing the result against numpy references on random
     data; garbage sent too early or a contribution summed twice cannot
     produce the reference value.
     """
+    if faults is not None:
+        faults.check_alive(schedule)
     bufs = [np.array(d, copy=True) for d in data]
-    for rnd in schedule.rounds:
+    retries = 0
+    for ridx, rnd in enumerate(schedule.rounds):
         staged = [
             (t, bufs[t.src][t.chunk_start : t.chunk_start + t.chunk_count].copy())
             for t in rnd.transfers
         ]
+        if faults is not None and faults.drop_prob > 0.0:
+            for t, _payload in staged:
+                # retransmits of the round-start snapshot: value-identical,
+                # but a streak over budget is a typed failure.
+                retries += faults.retries(ridx, t.src, t.dst)
         for t, payload in staged:
             sl = slice(t.chunk_start, t.chunk_start + t.chunk_count)
             if t.combine:
                 bufs[t.dst][sl] = bufs[t.dst][sl] + payload
             else:
                 bufs[t.dst][sl] = payload
+    if report is not None:
+        report["retries"] = retries
+        report["stalled_rounds"] = (
+            len([r for r in faults.stalled_rounds if r < len(schedule.rounds)])
+            if faults is not None
+            else 0
+        )
     return bufs
 
 
-def simulate_lowered(lowered, data: Sequence[np.ndarray]) -> list[np.ndarray]:
+def simulate_lowered(
+    lowered, data: Sequence[np.ndarray], faults=None, report: dict | None = None
+) -> list[np.ndarray]:
     """Value-level numpy replay of a :class:`core.schedules.LoweredSchedule`
     — the EXACT algorithm the compiled device executor runs: for every round,
     every lane class slices each source's block (clipped start), 'permutes'
@@ -108,16 +139,32 @@ def simulate_lowered(lowered, data: Sequence[np.ndarray]) -> list[np.ndarray]:
     with sends snapshotted per class, mirroring
     ``comm.executors.execute_compiled`` operation for operation.
 
+    ``faults``/``report`` follow :func:`simulate_collective`: the round
+    structure is compiled into dense lane tables, so the dead-rank check
+    runs over every lane's (src, dst) pairs and drop streaks are keyed by
+    (round, src, dst, lane-class index) — deterministic but independent of
+    the schedule-IR keying.
+
     The lowering parity tests assert this replay is bit-identical to
     :func:`simulate_collective` on the original schedule.
     """
+    if faults is not None:
+        faults.check_alive_pairs(
+            {(src, dst) for cls in lowered.classes for src, dst in cls.perm},
+            context=lowered.name,
+        )
     bufs = [np.array(d, copy=True) for d in data]
+    retries = 0
     for s in range(lowered.num_rounds):
-        for cls in lowered.classes:
+        for ci, cls in enumerate(lowered.classes):
             blocks = {
                 dst: bufs[src][cls.send_start[s, src]: cls.send_start[s, src] + cls.block].copy()
                 for src, dst in cls.perm
             }
+            if faults is not None and faults.drop_prob > 0.0:
+                for src, dst in cls.perm:
+                    if int(cls.hi[s, dst]) > int(cls.lo[s, dst]):
+                        retries += faults.retries(s, src, dst, tag=ci)
             for _src, dst in cls.perm:
                 lo, hi = int(cls.lo[s, dst]), int(cls.hi[s, dst])
                 if hi <= lo:
@@ -127,6 +174,13 @@ def simulate_lowered(lowered, data: Sequence[np.ndarray]) -> list[np.ndarray]:
                     bufs[dst][r0 + lo: r0 + hi] += blocks[dst][lo:hi]
                 else:
                     bufs[dst][r0 + lo: r0 + hi] = blocks[dst][lo:hi]
+    if report is not None:
+        report["retries"] = retries
+        report["stalled_rounds"] = (
+            len([r for r in faults.stalled_rounds if r < lowered.num_rounds])
+            if faults is not None
+            else 0
+        )
     return bufs
 
 
@@ -148,17 +202,37 @@ def check_complete(schedule: Schedule) -> None:
             )
 
 
-def timed_rounds(schedule: Schedule, chunk_bytes: int, ts: float, bw: float) -> float:
+def timed_rounds(
+    schedule: Schedule, chunk_bytes: int, ts: float, bw: float, faults=None
+) -> float:
     """Round-accurate time estimate: each round costs ts + (bytes of the
     largest transfer in the round)/bw; rounds serialize.
+
+    With ``faults``, the clock degrades the way the fabric would: a round's
+    bandwidth term is gated by its slowest active link (per-link slowdown
+    factors divide bw), transient drops inflate wire traffic by the expected
+    retransmit factor 1/(1-p), and stalled rounds add ``stall_s`` each. Dead
+    ranks raise ``DeadRankError`` — a dead mesh has no finish time.
 
     This is the 'simulator clock' the closed-form models in cost_model.py
     approximate; property tests assert they agree on the canonical cases.
     """
+    if faults is not None:
+        faults.check_alive(schedule)
+    retry = faults.retry_factor if faults is not None else 1.0
+    stalled = set(faults.stalled_rounds) if faults is not None else ()
     total = 0.0
-    for rnd in schedule.rounds:
+    for ridx, rnd in enumerate(schedule.rounds):
         if not rnd.transfers:
             continue
-        biggest = max(t.chunk_count for t in rnd.transfers) * chunk_bytes
-        total += ts + biggest / bw
+        if faults is None:
+            biggest = max(t.chunk_count for t in rnd.transfers) * chunk_bytes
+        else:
+            biggest = max(
+                t.chunk_count * chunk_bytes * faults.slowdown(t.src, t.dst)
+                for t in rnd.transfers
+            )
+        total += ts + biggest * retry / bw
+        if ridx in stalled:
+            total += faults.stall_s
     return total

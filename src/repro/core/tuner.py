@@ -24,7 +24,16 @@ from typing import Callable, Iterable, Sequence
 from . import cost_model
 from .cost_model import Hardware, TPU_V5E
 
-__all__ = ["Decision", "Tuner", "default_tuner", "OPS", "RAGGED_OPS"]
+__all__ = ["Decision", "Tuner", "TunerTableError", "default_tuner", "OPS", "RAGGED_OPS"]
+
+
+class TunerTableError(ValueError):
+    """A persisted tuner table is unreadable or violates the schema.
+
+    Subclasses ``ValueError`` so existing ``except ValueError`` callers keep
+    working; the message always names the offending file (and entry key,
+    when one exists) so a corrupt artifact is actionable from the traceback
+    alone instead of a bare ``JSONDecodeError``/``KeyError``."""
 
 # collective ops the tuner prices; 'bcast' keeps the legacy table-key format
 OPS = ("bcast", "reduce", "allreduce", "allgather", "reduce_scatter",
@@ -458,9 +467,24 @@ class Tuner:
         overlap window is a schedule-structure choice from the analytic
         sweep, not a timing measurement, so ``plan_overlap`` may consume it
         from a dryrun artifact (``experiments/overlap_depths.json``)."""
-        with open(path) as f:
-            payload = json.load(f)
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except json.JSONDecodeError as e:
+            raise TunerTableError(
+                f"{path}: corrupt or truncated JSON (line {e.lineno} col {e.colno}: "
+                f"{e.msg}) — regenerate the table with benchmarks/bench_tuner.py"
+            ) from e
+        except OSError as e:
+            raise TunerTableError(f"{path}: unreadable tuner table: {e}") from e
+        if not isinstance(payload, dict):
+            raise TunerTableError(
+                f"{path}: expected a JSON object with a 'table' field, got "
+                f"{type(payload).__name__}"
+            )
         table = payload.get("table", {})
+        if not isinstance(table, dict):
+            raise TunerTableError(f"{path}: 'table' must be an object")
         max_chunks = payload.get("max_chunks", 64)
         # schema gate: a rotten empirical table must fail here, not at trace
         # time deep inside a train step (see repro.comm.tables for the
@@ -468,33 +492,33 @@ class Tuner:
         known = set(cost_model.ALGO_COSTS) | {"noop", "xla_psum", "xla_allgather"}
         for key, entry in table.items():
             if not isinstance(entry, dict):
-                raise ValueError(f"{path}: entry {key!r} must be an object, got {entry!r}")
+                raise TunerTableError(f"{path}: entry {key!r} must be an object, got {entry!r}")
             if "overlap_depth" in entry and (
                 not isinstance(entry["overlap_depth"], int) or entry["overlap_depth"] < 1
             ):
-                raise ValueError(f"{path}: entry {key!r} overlap_depth must be a positive int")
+                raise TunerTableError(f"{path}: entry {key!r} overlap_depth must be a positive int")
             if "fused_path" in entry and not isinstance(entry["fused_path"], bool):
-                raise ValueError(f"{path}: entry {key!r} fused_path must be a bool")
+                raise TunerTableError(f"{path}: entry {key!r} fused_path must be a bool")
             if set(entry) == {"overlap_depth"}:
                 continue  # depth-only entry (record_overlap, no measurement)
             if not {"algo", "num_chunks", "measured_s"} <= set(entry):
-                raise ValueError(
+                raise TunerTableError(
                     f"{path}: entry {key!r} must have algo/num_chunks/measured_s, got {entry!r}"
                 )
             if entry["algo"] not in known:
-                raise ValueError(f"{path}: entry {key!r} has unknown algo {entry['algo']!r}")
+                raise TunerTableError(f"{path}: entry {key!r} has unknown algo {entry['algo']!r}")
             if not isinstance(entry["num_chunks"], int) or entry["num_chunks"] < 1:
-                raise ValueError(f"{path}: entry {key!r} num_chunks must be a positive int")
+                raise TunerTableError(f"{path}: entry {key!r} num_chunks must be a positive int")
             if not isinstance(entry["measured_s"], (int, float)) or not math.isfinite(
                 entry["measured_s"]
             ):
-                raise ValueError(f"{path}: entry {key!r} measured_s must be finite")
+                raise TunerTableError(f"{path}: entry {key!r} measured_s must be finite")
             # clamp num_chunks to the table's own max_chunks at read time —
             # the executors honor at most that many chunks (see select())
             entry["num_chunks"] = min(entry["num_chunks"], max_chunks)
         if payload.get("dryrun"):
             if not allow_dryrun:
-                raise ValueError(
+                raise TunerTableError(
                     f"{path}: table is branded dryrun (simulator stand-ins, not device "
                     "measurements) and cannot seed empirical tuner decisions; pass "
                     "allow_dryrun=True to schema-check it (measured entries are "

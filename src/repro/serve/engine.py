@@ -44,7 +44,8 @@ class Engine:
     prefill-built KV caches are placed per ``cache_specs``."""
 
     def __init__(self, cfg: ModelConfig, params, *, mesh=None, max_len: int = 0,
-                 distribute: bool = False, double_buffer: bool = False):
+                 distribute: bool = False, double_buffer: bool = False,
+                 drain_dir: Optional[str] = None):
         self.cfg = cfg
         self.model = Model(cfg)
         self.mesh = mesh
@@ -59,7 +60,7 @@ class Engine:
                 # them so distribution never doubles the resident footprint
                 params = distribute_weights(
                     params, mesh, specs=pspecs, double_buffer=double_buffer,
-                    donate=True,
+                    donate=True, drain_dir=drain_dir,
                 )
             else:
                 params = jax.device_put(params, _placements(mesh, pspecs))
@@ -147,7 +148,8 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
                        bucket_bytes: int = 4 << 20, return_plans: bool = False,
                        double_buffer: bool = False, overlap_depth: int = 2,
                        stage_chunk: int = 64 * 1024, donate: bool = False,
-                       compiled: bool | None = None):
+                       compiled: bool | None = None,
+                       drain_dir: Optional[str] = None):
     """Broadcast freshly-loaded weights across the data axes with the tuned
     library (the paper's 'training parameters exchange' applied at load).
 
@@ -173,7 +175,16 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
     copies of a bucket in device memory. The caller's ``params`` are
     invalidated — pass it when the engine owns the freshly-loaded weights
     (the ``Engine(distribute=True)`` path does). ``compiled`` routes the
-    per-bucket replay (None = tuned policy, see ``comm.api.apply_plan``)."""
+    per-bucket replay (None = tuned policy, see ``comm.api.apply_plan``).
+
+    ``drain_dir``: graceful degradation on unrecoverable failure. If the
+    distribution program itself raises (mesh lost a device mid-broadcast,
+    compile failure, OOM), the pre-distribution weights are drained to an
+    atomic checkpoint under ``drain_dir`` and a typed
+    :class:`~repro.comm.WeightSyncError` is raised chaining the cause —
+    never a silent partial distribution. The drain fetches the host copy
+    before donation hands the buffers to the program, so the snapshot is
+    valid even when ``donate=True`` invalidated the device buffers."""
     from ..core import bucketing
 
     bucket_spec, plans = plan_distribution(
@@ -215,7 +226,32 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
         out_specs=jax.tree.map(lambda _: P(), params),
         check_vma=False,
     )
-    out = jax.jit(f, donate_argnums=(0,) if donate else ())(params)
-    if specs is not None:
-        out = jax.device_put(out, _placements(mesh, specs))
+    snapshot = None
+    if drain_dir is not None:
+        # host copy taken before donation can invalidate the device buffers;
+        # host RAM is the cheap side of the serving node, device HBM is not
+        snapshot = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), params)
+    try:
+        out = jax.jit(f, donate_argnums=(0,) if donate else ())(params)
+        if specs is not None:
+            out = jax.device_put(out, _placements(mesh, specs))
+    except Exception as e:  # noqa: BLE001 — rewrapped as a typed, actionable error
+        if snapshot is None:
+            raise
+        from ..comm.faults import WeightSyncError
+        from ..train import checkpoint as ckpt_lib
+
+        try:
+            fname = ckpt_lib.save_checkpoint(drain_dir, 0, snapshot)
+        except Exception as drain_err:  # pragma: no cover - disk-full etc.
+            raise WeightSyncError(
+                f"weight distribution failed ({type(e).__name__}: {e}) AND the "
+                f"drain to {drain_dir!r} also failed "
+                f"({type(drain_err).__name__}: {drain_err}); weights may be lost"
+            ) from e
+        raise WeightSyncError(
+            f"weight distribution failed ({type(e).__name__}: {e}); "
+            f"pre-distribution weights drained to {fname} — restore from the "
+            f"checkpoint and replan on a healthy mesh"
+        ) from e
     return (out, plans) if return_plans else out

@@ -32,7 +32,22 @@ def _key(path) -> str:
     return "/".join(parts)
 
 
+def _atomic_write(final: str, write_fn) -> None:
+    """Write-temp + fsync + rename: the final path either doesn't exist or
+    holds a complete file — a crash mid-write leaves only a ``.tmp``."""
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+
+
 def save_checkpoint(path: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    """Atomic checkpoint save. The npz lands first (write-temp + rename),
+    the json sidecar last — it is the commit marker: :func:`latest_step`
+    only counts steps with BOTH files, so a crash at any point mid-save
+    resumes from the previous complete checkpoint instead of a torn one."""
     os.makedirs(path, exist_ok=True)
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {}
@@ -44,19 +59,23 @@ def save_checkpoint(path: str, step: int, tree: Any, extra: Optional[dict] = Non
         else:
             arrays[k] = arr
     fname = os.path.join(path, f"ckpt_{step:08d}.npz")
-    np.savez(fname, **arrays)
-    with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump({"step": step, **(extra or {})}, f)
+    _atomic_write(fname, lambda f: np.savez(f, **arrays))
+    meta = json.dumps({"step": step, **(extra or {})}).encode()
+    _atomic_write(os.path.join(path, f"ckpt_{step:08d}.json"), lambda f: f.write(meta))
     return fname
 
 
 def latest_step(path: str) -> Optional[int]:
+    """Latest COMPLETE checkpoint step: an npz without its json commit
+    marker is a torn save (crash between the two writes) and is skipped."""
     if not os.path.isdir(path):
         return None
+    files = set(os.listdir(path))
     steps = [
         int(f[len("ckpt_") : -len(".npz")])
-        for f in os.listdir(path)
+        for f in files
         if f.startswith("ckpt_") and f.endswith(".npz")
+        and f[: -len(".npz")] + ".json" in files
     ]
     return max(steps) if steps else None
 

@@ -39,6 +39,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..comm import hierarchical_allreduce_axes, overlap_allreduce_tree, pallreduce_tree
@@ -54,6 +55,7 @@ __all__ = [
     "make_bcast_train_step",
     "make_tuned_allreduce_train_step",
     "make_overlap_allreduce_train_step",
+    "make_degraded_psum_train_step",
 ]
 
 
@@ -271,6 +273,75 @@ def make_overlap_allreduce_train_step(
     return _make_comm_sync_step(
         model, run_cfg, mesh, sync, optimizer, lr_fn, mode="overlap_allreduce"
     )
+
+
+def make_degraded_psum_train_step(
+    model,
+    run_cfg: RunConfig,
+    optimizer: Optimizer,
+    lr_fn: Callable,
+    mesh,
+    *,
+    health,
+):
+    """Graceful-degradation sync: psum over SURVIVORS with corrected mean
+    normalization (``comm.faults.MeshHealth``).
+
+    When ranks die mid-run the tuned schedules are unusable until a replan,
+    but training can limp on: every rank's gradient is masked by its
+    liveness bit before the psum and the mean divides by the survivor count
+    — so the surviving ranks compute exactly the ``n_surv``-way
+    data-parallel update (dividing by the full ``n_dp`` would silently
+    shrink the effective learning rate by ``n_surv / n_dp``; that silent
+    skew is the bug this factory exists to prevent). Ranks are linearized
+    over the data axes in mesh order, matching ``MeshHealth`` rank ids.
+
+    The dead ranks' processes (when still running — e.g. a degraded link
+    rather than a lost host) contribute zeros and receive the same
+    replicated update, so the mesh stays parameter-coherent for a later
+    recovery replan."""
+    from ..comm.faults import DeadRankError
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    assert axis_sizes.get("model", 1) == 1, "degraded_psum mode is pure-DP"
+    dp = dp_axes(mesh)
+    assert len(dp) >= 1
+    compute = _grad_fn(model, run_cfg)
+    n_dp = 1
+    for a in dp:
+        n_dp *= axis_sizes[a]
+    if health.n != n_dp:
+        raise ValueError(f"health report is for n={health.n}, mesh has n_dp={n_dp}")
+    survivors = health.survivors()
+    n_surv = len(survivors)
+    if n_surv == 0:
+        raise DeadRankError("no surviving data-parallel ranks; restore from checkpoint")
+    alive = np.zeros((n_dp,), np.float32)
+    alive[list(survivors)] = 1.0
+
+    def local_step(params, opt_state, batch):
+        loss, metrics, grads = compute(params, batch)
+        r = jnp.zeros((), jnp.int32)
+        for a in dp:
+            r = r * axis_sizes[a] + jax.lax.axis_index(a)
+        m = jnp.asarray(alive)[r]
+
+        def survivor_mean(v):
+            v = v * m.astype(v.dtype)
+            for ax in dp:
+                v = jax.lax.psum(v, ax)
+            return v / n_surv
+
+        grads = jax.tree.map(survivor_mean, grads)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = lr_fn(opt_state["step"])
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        loss = survivor_mean(loss)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out.update({k: survivor_mean(v) for k, v in metrics.items()})
+        return params, opt_state, out
+
+    return _wrap_dp_step(local_step, mesh, dp)
 
 
 def _make_comm_sync_step(model, run_cfg, mesh, sync, optimizer, lr_fn, *, mode):

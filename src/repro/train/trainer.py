@@ -20,6 +20,7 @@ from ..optim.schedules import warmup_cosine
 from . import checkpoint as ckpt_lib
 from .train_step import (
     make_bcast_train_step,
+    make_degraded_psum_train_step,
     make_overlap_allreduce_train_step,
     make_train_step,
     make_tuned_allreduce_train_step,
@@ -37,6 +38,7 @@ class Trainer:
         mesh=None,
         data_path: Optional[str] = None,
         ckpt_dir: Optional[str] = None,
+        health=None,
     ):
         self.cfg = cfg
         self.run = run
@@ -46,6 +48,9 @@ class Trainer:
         self.lr_fn = warmup_cosine(run.learning_rate, run.warmup_steps, run.total_steps)
         self.source = make_source(cfg, path=data_path, seed=run.seed)
         self.ckpt_dir = ckpt_dir
+        # comm.faults.MeshHealth for the data-parallel world; a degraded
+        # report overrides sync_mode with the psum-over-survivors fallback
+        self.health = health
         self._build()
 
     def _build(self):
@@ -55,7 +60,21 @@ class Trainer:
             "tuned_allreduce": make_tuned_allreduce_train_step,
             "overlap_allreduce": make_overlap_allreduce_train_step,
         }
-        if self.run.sync_mode in explicit_sync:
+        if self.health is not None and not self.health.healthy and self.health.dead_ranks:
+            # graceful degradation: the tuned schedules assume every rank is
+            # reachable, so a dead-rank report routes gradient sync to the
+            # masked psum with survivor-count normalization until a replan
+            print(
+                f"trainer: mesh degraded (dead ranks {self.health.dead_ranks}); "
+                f"sync_mode {self.run.sync_mode!r} falls back to psum-over-survivors",
+                flush=True,
+            )
+            step_fn = make_degraded_psum_train_step(
+                self.model, self.run, self.optimizer, self.lr_fn, mesh,
+                health=self.health,
+            )
+            self._pspecs = jax.tree.map(lambda _: P(), self.model.param_shapes())
+        elif self.run.sync_mode in explicit_sync:
             # calibrated empirical decisions (Tuner.save format) when the
             # run points at a table; analytic otherwise
             from ..core.tuner import Tuner

@@ -1,0 +1,221 @@
+"""Fault-injection layer: FaultSpec/MeshHealth semantics and the simulator's
+fault threading.
+
+The contract under test (the subsystem's one-sentence spec): under every
+injected fault class, a replay either converges bit-identically to the
+fault-free oracle or raises a typed FaultError — never a silent wrong
+answer. Clock-only faults (slow links, stalls, in-budget drops) must not
+touch values; value-affecting faults (dead ranks, drop streaks past budget)
+must raise with a named recovery action.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.comm import plan_collective, plan_overlap, simulate_overlap
+from repro.comm.faults import (
+    DeadRankError,
+    FaultError,
+    FaultSpec,
+    MeshHealth,
+    TransientDropError,
+)
+from repro.core import cost_model
+from repro.core.simulator import simulate_collective, simulate_lowered, timed_rounds
+
+# (op, algo) points covering overwrite, combine, and ragged value paths
+POINTS = [
+    ("bcast", "pipelined_chain"),
+    ("allreduce", "ring_allreduce"),
+    ("reduce_scatter", "ring_reduce_scatter"),
+]
+
+
+def _plan(op, algo, n=5, M=1 << 14):
+    return plan_collective(op, M, n, algo=algo)
+
+
+def _data(plan, rng):
+    return [rng.standard_normal((plan.schedule.num_chunks, 3)) for _ in range(plan.n)]
+
+
+# ------------------------------- FaultSpec ----------------------------------
+
+
+def test_fault_spec_normalization_and_validation():
+    spec = FaultSpec(dead_ranks=(3, 1, 3), stalled_rounds=(2, 0, 2),
+                     link_slowdown={(1, 0): 2.0, (0, 1): 4.0})
+    assert spec.dead_ranks == (1, 3)
+    assert spec.stalled_rounds == (0, 2)
+    assert spec.slowdown(0, 1) == 4.0
+    assert spec.slowdown(1, 0) == 2.0
+    assert spec.slowdown(2, 3) == 1.0
+    with pytest.raises(ValueError, match="slowdown factor"):
+        FaultSpec(link_slowdown=(((0, 1), 0.5),))
+    with pytest.raises(ValueError, match="drop_prob"):
+        FaultSpec(drop_prob=1.0)
+    with pytest.raises(ValueError, match="max_drop_retries"):
+        FaultSpec(max_drop_retries=-1)
+
+
+def test_fault_spec_identity():
+    assert FaultSpec().healthy
+    assert not FaultSpec(drop_prob=0.1).healthy
+    assert FaultSpec(seed=1).fingerprint() == FaultSpec(seed=1).fingerprint()
+    assert FaultSpec(seed=1).fingerprint() != FaultSpec(seed=2).fingerprint()
+    assert FaultSpec().retry_factor == 1.0
+    assert FaultSpec(drop_prob=0.5).retry_factor == pytest.approx(2.0)
+
+
+def test_fault_errors_are_typed():
+    for err in (DeadRankError, TransientDropError):
+        assert issubclass(err, FaultError)
+        assert issubclass(err, RuntimeError)
+
+
+def test_retries_deterministic_in_seed():
+    spec = FaultSpec(seed=11, drop_prob=0.4, max_drop_retries=50)
+    draws = [spec.retries(r, s, d) for r in range(4) for s in range(3) for d in range(3)]
+    again = [spec.retries(r, s, d) for r in range(4) for s in range(3) for d in range(3)]
+    assert draws == again
+    assert any(k > 0 for k in draws)  # p=0.4 over 36 draws
+
+
+# ------------------------------- MeshHealth ---------------------------------
+
+
+def test_mesh_health_survivors_and_links():
+    h = MeshHealth(n=6, dead_ranks=(4, 1),
+                   slow_links=(((0, 2), 3.0), ((1, 2), 9.0)))
+    assert h.survivors() == (0, 2, 3, 5)
+    # the slow link touching dead rank 1 drops out of degraded pricing
+    assert h.surviving_slow_links() == (((0, 2), 3.0),)
+    assert not h.healthy
+    assert MeshHealth(n=6).healthy
+    assert h.fingerprint() != MeshHealth(n=6).fingerprint()
+    with pytest.raises(ValueError, match="outside mesh"):
+        MeshHealth(n=4, dead_ranks=(4,))
+
+
+def test_mesh_health_from_fault_spec():
+    spec = FaultSpec(dead_ranks=(2,), link_slowdown=(((0, 1), 2.0),))
+    h = MeshHealth.from_fault_spec(5, spec)
+    assert h.n == 5 and h.dead_ranks == (2,) and h.slow_links == spec.link_slowdown
+
+
+# --------------------------- simulator threading ----------------------------
+
+
+@pytest.mark.parametrize("op,algo", POINTS)
+def test_clock_faults_are_bit_identical(op, algo):
+    """Slow links, stalls, and in-budget drops never change values — on the
+    schedule IR replay AND the lowered dense-table replay."""
+    plan = _plan(op, algo)
+    rng = np.random.default_rng(0)
+    data = _data(plan, rng)
+    oracle = simulate_collective(plan.schedule, data)
+    spec = FaultSpec(seed=3, link_slowdown=(((0, 1), 8.0),), stalled_rounds=(0,),
+                     drop_prob=0.3, max_drop_retries=64)
+    report = {}
+    faulty = simulate_collective(plan.schedule, data, faults=spec, report=report)
+    for r in range(plan.n):
+        np.testing.assert_array_equal(faulty[r], oracle[r])
+    assert report["retries"] >= 0
+    assert report["stalled_rounds"] == 1
+    low_report = {}
+    lowered = simulate_lowered(plan.lowered(), data, faults=spec, report=low_report)
+    for r in range(plan.n):
+        np.testing.assert_array_equal(lowered[r], oracle[r])
+    assert low_report["retries"] >= 0
+
+
+@pytest.mark.parametrize("op,algo", POINTS)
+def test_dead_rank_raises_on_both_replays(op, algo):
+    plan = _plan(op, algo)
+    data = _data(plan, np.random.default_rng(0))
+    spec = FaultSpec(dead_ranks=(2,))
+    with pytest.raises(DeadRankError, match="dead rank 2"):
+        simulate_collective(plan.schedule, data, faults=spec)
+    with pytest.raises(DeadRankError, match="dead rank 2"):
+        simulate_lowered(plan.lowered(), data, faults=spec)
+
+
+def test_drop_streak_past_budget_is_typed():
+    plan = _plan("bcast", "pipelined_chain")
+    data = _data(plan, np.random.default_rng(0))
+    spec = FaultSpec(seed=0, drop_prob=0.9, max_drop_retries=0)
+    with pytest.raises(TransientDropError, match="budget"):
+        simulate_collective(plan.schedule, data, faults=spec)
+
+
+def test_timed_rounds_degradation():
+    plan = _plan("allreduce", "ring_allreduce", n=4)
+    sched = plan.schedule
+    base = timed_rounds(sched, 256, 1e-6, 1e9)
+    # a healthy spec prices identically to no spec
+    assert timed_rounds(sched, 256, 1e-6, 1e9, faults=FaultSpec()) == base
+    slow = timed_rounds(sched, 256, 1e-6, 1e9,
+                        faults=FaultSpec(link_slowdown=(((0, 1), 4.0),)))
+    assert slow > base
+    stall = timed_rounds(sched, 256, 1e-6, 1e9,
+                         faults=FaultSpec(stalled_rounds=(0, 1), stall_s=1e-3))
+    assert stall == pytest.approx(base + 2e-3)
+    drop = timed_rounds(sched, 256, 1e-6, 1e9, faults=FaultSpec(drop_prob=0.5))
+    assert drop > base
+    with pytest.raises(DeadRankError):
+        timed_rounds(sched, 256, 1e-6, 1e9, faults=FaultSpec(dead_ranks=(0,)))
+
+
+# ------------------------- degraded cost modelling --------------------------
+
+
+def test_worst_link_factor_forms():
+    assert cost_model.worst_link_factor(()) == 1.0
+    assert cost_model.worst_link_factor({(0, 1): 3.0, (1, 2): 5.0}) == 5.0
+    assert cost_model.worst_link_factor((((0, 1), 2.5),)) == 2.5
+
+
+def test_cost_degraded_matches_and_degrades():
+    M, n = 1 << 20, 8
+    base = cost_model.cost("ring_allreduce", M, n)
+    assert cost_model.cost_degraded("ring_allreduce", M, n) == base
+    worse = cost_model.cost_degraded(
+        "ring_allreduce", M, n, slow_links=(((0, 1), 4.0),)
+    )
+    assert worse > base
+    # startup terms are unchanged: degradation is bounded by the bw factor
+    assert worse < 4.0 * base + 1e-12
+
+
+def test_degraded_bandwidth():
+    assert cost_model.degraded_bandwidth(8e9, ()) == 8e9
+    assert cost_model.degraded_bandwidth(8e9, {(0, 1): 4.0}) == pytest.approx(2e9)
+
+
+# ------------------------------ overlap faults ------------------------------
+
+
+def _oplan(n=4, leaves=3):
+    tree = {f"l{i}": jax.ShapeDtypeStruct((2048,), np.float32) for i in range(leaves)}
+    return plan_overlap(tree, [("data", n)], bucket_bytes=4096)
+
+
+def test_simulate_overlap_fault_keys():
+    oplan = _oplan()
+    base = simulate_overlap(oplan)
+    assert "fault_slowdown" not in base
+    spec = FaultSpec(link_slowdown=(((0, 1), 3.0),), stalled_rounds=(0,))
+    sim = simulate_overlap(oplan, faults=spec)
+    assert sim["comm_s_faulty"] > sim["comm_s_healthy"]
+    assert sim["fault_slowdown"] > 1.0
+    assert sim["fault_fingerprint"] == spec.fingerprint()
+    # the healthy clock agrees with the per-bucket plan clocks
+    expected = sum(p.timed_rounds_s() for ax in oplan.axes for p in oplan.plans[ax])
+    assert sim["comm_s_healthy"] == pytest.approx(expected)
+
+
+def test_simulate_overlap_dead_rank_raises():
+    with pytest.raises(DeadRankError):
+        simulate_overlap(_oplan(), faults=FaultSpec(dead_ranks=(1,)))

@@ -1,0 +1,360 @@
+"""Degraded-mesh replanning and the resilient execution wrapper.
+
+Satellite acceptance (ISSUE 7): for each op x n in {3, 4, 8} x one dead
+rank, the survivor-mesh schedule converges in the numpy simulator and its
+wire bytes match ``expected_wire_bytes`` on the SHRUNK mesh. Plus:
+plan_cached health keying (a health transition can never serve a pre-fault
+plan), the typed fallback chain, the straggler watchdog -> Tuner.record ->
+fingerprint invalidation loop, and trainer graceful degradation.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.comm import (
+    DeadRankError,
+    FallbackExhaustedError,
+    FallbackPolicy,
+    FaultSpec,
+    MeshHealth,
+    Watchdog,
+    expected_wire_bytes,
+    plan_cached,
+    plan_collective,
+    plan_degraded,
+)
+from repro.comm import api as comm_api
+from repro.comm.faults import FaultError
+from repro.core.simulator import simulate_collective
+from repro.core.tuner import Tuner
+
+# non-composite algo per op (reduce_then_bcast has no single-phase
+# closed-form wire accounting — expected_wire_bytes raises on it by design)
+PINNED = {
+    "bcast": "pipelined_chain",
+    "reduce": "pipelined_reduce_chain",
+    "allreduce": "ring_allreduce",
+    "allgather": "ring_allgather",
+    "reduce_scatter": "ring_reduce_scatter",
+    "allgatherv": "ring_allgatherv",
+    "alltoallv": "pairwise_alltoallv",
+}
+DEAD = 1
+
+
+def _sizes(op, n, rng):
+    if op == "allgatherv":
+        return tuple(int(rng.integers(1, 5)) for _ in range(n))
+    if op == "alltoallv":
+        return tuple(int(rng.integers(1, 4)) for _ in range(n * n))
+    return None
+
+
+def _check_converges(plan, rng):
+    """Survivor-mesh convergence in the numpy simulator — same conventions
+    as tests/test_comm_plans.py, on the plan's (shrunk) logical mesh."""
+    sched = plan.schedule
+    n, root = sched.n, sched.root
+    if plan.op in ("allgatherv", "alltoallv"):
+        sz = np.asarray(plan.sizes, dtype=np.int64)
+        full = rng.standard_normal((sched.num_chunks, 3))
+        owner = (
+            np.repeat(np.arange(n), sz)
+            if plan.op == "allgatherv"
+            else np.repeat(np.arange(n * n) // n, sz)
+        )
+        data = [np.where((owner == r)[:, None], full, 0.0) for r in range(n)]
+        out = simulate_collective(sched, data)
+        if plan.op == "allgatherv":
+            for r in range(n):
+                np.testing.assert_array_equal(out[r], full, err_msg=f"rank {r}")
+        else:
+            off = np.concatenate([[0], np.cumsum(sz)])
+            for r in range(n):
+                for s in range(n):
+                    b = s * n + r
+                    lo, hi = off[b], off[b + 1]
+                    np.testing.assert_array_equal(
+                        out[r][lo:hi], full[lo:hi], err_msg=f"rank {r} block {s}->{r}"
+                    )
+        return
+    data = [rng.standard_normal((sched.num_chunks, 3)) for _ in range(n)]
+    out = simulate_collective(sched, data)
+    if plan.op == "bcast":
+        for r in range(n):
+            np.testing.assert_allclose(out[r], data[root], rtol=1e-9, err_msg=f"rank {r}")
+        return
+    total = np.sum(data, axis=0)
+    if plan.op == "reduce":
+        np.testing.assert_allclose(out[root], total, rtol=1e-9)
+    elif plan.op == "allreduce":
+        for r in range(n):
+            np.testing.assert_allclose(out[r], total, rtol=1e-9, err_msg=f"rank {r}")
+    elif plan.op == "allgather":
+        ref = np.stack([data[r][r] for r in range(n)])
+        for r in range(n):
+            np.testing.assert_allclose(out[r], ref, rtol=1e-9, err_msg=f"rank {r}")
+    elif plan.op == "reduce_scatter":
+        for r in range(n):
+            np.testing.assert_allclose(out[r][r], total[r], rtol=1e-9, err_msg=f"rank {r}")
+
+
+# ----------------------- degraded replanning parity -------------------------
+
+
+@pytest.mark.parametrize("n", [3, 4, 8])
+@pytest.mark.parametrize("op,algo", sorted(PINNED.items()))
+def test_degraded_replanning_parity(op, algo, n):
+    rng = np.random.default_rng((5, n))
+    sizes = _sizes(op, n, rng)
+    M = (1 << 14) if sizes is None else 512 * sum(sizes)
+    health = MeshHealth(n=n, dead_ranks=(DEAD,))
+    plan = plan_degraded(op, M, n, health, algo=algo, sizes=sizes)
+    assert plan.n == n - 1
+    assert plan.survivors == tuple(r for r in range(n) if r != DEAD)
+    assert math.isfinite(plan.predicted_s)
+    want = expected_wire_bytes(
+        op, plan.algo, plan.M, plan.n, plan.num_chunks, sizes=plan.sizes
+    )
+    assert plan.wire_bytes() == want, (plan.wire_bytes(), want)
+    _check_converges(plan, rng)
+
+
+def test_degraded_ragged_sizes_shrink():
+    n = 4
+    health = MeshHealth(n=n, dead_ranks=(2,))
+    sizes = (5, 2, 3, 1)
+    plan = plan_degraded("allgatherv", 1024 * sum(sizes), n, health,
+                         algo="ring_allgatherv", sizes=sizes)
+    assert plan.sizes == (5, 2, 1)         # dead rank 2's rows drop out
+    assert plan.M == 1024 * 8
+
+
+def test_dead_root_is_typed():
+    health = MeshHealth(n=4, dead_ranks=(0,))
+    for op in ("bcast", "reduce"):
+        with pytest.raises(DeadRankError, match="checkpoint"):
+            plan_degraded(op, 1 << 12, 4, health, algo=PINNED[op])
+    # rootless ops replan fine with rank 0 gone
+    plan = plan_degraded("allreduce", 1 << 12, 4, health, algo="ring_allreduce")
+    assert plan.n == 3 and plan.survivors == (1, 2, 3)
+
+
+def test_all_dead_is_typed():
+    with pytest.raises(DeadRankError):
+        plan_degraded("allreduce", 1 << 12, 2, MeshHealth(n=2, dead_ranks=(0, 1)))
+
+
+def test_slow_link_only_reprices_without_shrinking():
+    health = MeshHealth(n=4, slow_links=(((0, 1), 8.0),))
+    base = plan_collective("allreduce", 1 << 20, 4, algo="ring_allreduce")
+    plan = plan_degraded("allreduce", 1 << 20, 4, health, algo="ring_allreduce")
+    assert plan.n == 4 and plan.survivors is None
+    assert plan.predicted_s > base.predicted_s
+    assert plan.decision.source.endswith("+degraded")
+
+
+# -------------------------- plan cache health keys ---------------------------
+
+
+def test_plan_cached_health_fingerprint_keying():
+    kw = dict(op="allreduce", M=1 << 16, n=8, algo="ring_allreduce")
+    healthy = plan_cached(**kw)
+    assert plan_cached(**kw) is healthy
+    # an explicitly healthy report keys separately but plans identically
+    ok = plan_cached(**kw, health=MeshHealth(n=8))
+    assert ok.n == 8 and ok.survivors is None
+    degraded = plan_cached(**kw, health=MeshHealth(n=8, dead_ranks=(3,)))
+    assert degraded is not healthy
+    assert degraded.n == 7
+    assert degraded.survivors == (0, 1, 2, 4, 5, 6, 7)
+    # degraded plans are cached under their health fingerprint
+    assert plan_cached(**kw, health=MeshHealth(n=8, dead_ranks=(3,))) is degraded
+    # a different health transition gets a different plan
+    other = plan_cached(**kw, health=MeshHealth(n=8, dead_ranks=(5,)))
+    assert other is not degraded and other.survivors == (0, 1, 2, 3, 4, 6, 7)
+    # and the pre-fault plan is still served to healthy callers
+    assert plan_cached(**kw) is healthy
+
+
+# ------------------------------ fallback chain -------------------------------
+
+
+def test_fallback_policy_validation():
+    with pytest.raises(ValueError, match="unknown fallback stages"):
+        FallbackPolicy(chain=("compiled", "warp"))
+    with pytest.raises(ValueError, match="at least one stage"):
+        FallbackPolicy(chain=())
+    with pytest.raises(ValueError, match="max_retries"):
+        FallbackPolicy(max_retries=-1)
+
+
+def _fast_policy(**kw):
+    kw.setdefault("backoff_s", 0.0)
+    return FallbackPolicy(**kw)
+
+
+def test_fallback_chain_degrades_to_one_shot(monkeypatch):
+    plan = plan_collective("allreduce", 1 << 12, 4, algo="ring_allreduce")
+    calls = []
+
+    def broken_apply(plan, x, axis_name, *, fused=True, compiled=None):
+        calls.append("compiled" if compiled else "unrolled")
+        raise RuntimeError("executor exploded")
+
+    monkeypatch.setattr(comm_api, "apply_plan", broken_apply)
+    monkeypatch.setattr(comm_api, "_one_shot_fallback",
+                        lambda plan, x, ax: "one-shot-result")
+    events = []
+    out = comm_api.apply_plan_resilient(
+        plan, None, "data", policy=_fast_policy(max_retries=1),
+        on_event=events.append,
+    )
+    assert out == "one-shot-result"
+    # each schedule stage burned its retry before the chain degraded
+    assert calls == ["compiled", "compiled", "unrolled", "unrolled"]
+    assert [e.outcome for e in events] == ["error"] * 4 + ["ok"]
+    assert events[-1].stage == "xla"
+
+
+def test_fallback_exhausted_names_every_cause(monkeypatch):
+    plan = plan_collective("allreduce", 1 << 12, 4, algo="ring_allreduce")
+
+    def broken(*a, **kw):
+        raise RuntimeError("no fabric")
+
+    monkeypatch.setattr(comm_api, "apply_plan", broken)
+    monkeypatch.setattr(comm_api, "_one_shot_fallback", broken)
+    with pytest.raises(FallbackExhaustedError) as ei:
+        comm_api.apply_plan_resilient(
+            plan, None, "data", policy=_fast_policy(max_retries=0)
+        )
+    msg = str(ei.value)
+    for stage in ("compiled[0]", "unrolled[0]", "xla[0]"):
+        assert stage in msg
+    assert "no fabric" in msg
+
+
+def test_fault_errors_propagate_immediately(monkeypatch):
+    plan = plan_collective("allreduce", 1 << 12, 4, algo="ring_allreduce")
+    calls = []
+
+    def dead(*a, **kw):
+        calls.append(1)
+        raise DeadRankError("rank 2 is gone; replan")
+
+    monkeypatch.setattr(comm_api, "apply_plan", dead)
+    with pytest.raises(DeadRankError, match="replan"):
+        comm_api.apply_plan_resilient(plan, None, "data",
+                                      policy=_fast_policy(max_retries=3))
+    assert len(calls) == 1  # a diagnosis is not retried
+    assert issubclass(DeadRankError, FaultError)
+
+
+def test_slow_success_is_straggler_not_failure(monkeypatch):
+    plan = plan_collective("allreduce", 1 << 12, 4, algo="ring_allreduce")
+
+    def slow_ok(plan, x, axis_name, **kw):
+        import time
+        time.sleep(0.02)
+        return "late-but-right"
+
+    monkeypatch.setattr(comm_api, "apply_plan", slow_ok)
+    events = []
+    out = comm_api.apply_plan_resilient(
+        plan, None, "data", policy=_fast_policy(timeout_s=1e-4),
+        on_event=events.append,
+    )
+    assert out == "late-but-right"
+    assert [e.outcome for e in events] == ["straggler"]
+
+
+# -------------------------------- watchdog -----------------------------------
+
+
+def test_watchdog_flags_stragglers_into_tuner():
+    tuner = Tuner()
+    wd = Watchdog(tuner, straggler_factor=3.0)
+    plan = plan_collective("allreduce", 1 << 16, 8, algo="ring_allreduce",
+                           tuner=tuner)
+    fp0 = tuner.fingerprint()
+    exp = wd.expected_s(plan)
+    assert exp > 0 and math.isfinite(exp)
+    assert wd.observe(plan, exp) is None          # on-time: no report
+    assert tuner.fingerprint() == fp0
+    rep = wd.observe(plan, exp * 10)              # straggler
+    assert rep is not None and rep.factor == pytest.approx(10.0)
+    assert wd.reports == [rep]
+    # the observation landed in the tuner and moved its fingerprint, so
+    # plan_cached keys shift off every plan priced with the stale table
+    assert tuner.fingerprint() != fp0
+    seen = []
+    wd2 = Watchdog(straggler_factor=2.0, on_straggler=seen.append)
+    assert wd2.observe(plan, exp * 5) is not None
+    assert len(seen) == 1
+    with pytest.raises(ValueError, match="straggler_factor"):
+        Watchdog(straggler_factor=1.0)
+
+
+# --------------------- trainer graceful degradation --------------------------
+
+
+def test_trainer_degraded_psum_fallback(dist):
+    """A dead-rank MeshHealth overrides sync_mode with the masked
+    psum-over-survivors step, and training still converges."""
+    dist(
+        """
+import numpy as np
+from repro.comm.faults import MeshHealth
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.launch.mesh import make_local_mesh
+from repro.train.trainer import Trainer
+
+cfg = get_config("xlstm-350m-smoke")
+run = RunConfig(total_steps=4, warmup_steps=1, sync_mode="tuned_allreduce",
+                learning_rate=1e-3, seed=3)
+health = MeshHealth(n=8, dead_ranks=(3,))
+tr = Trainer(cfg, run, mesh=make_local_mesh(1), health=health)
+_, _, hist = tr.train(batch=8, seq=32, steps=4, log_every=3)
+losses = [h["loss"] for h in hist]
+assert all(np.isfinite(l) for l in losses), losses
+assert losses[-1] < losses[0], losses
+print("PASS")
+""",
+        timeout=580,
+    )
+
+
+def test_degraded_psum_survivor_mean_normalization(dist):
+    """The masked psum divides by the SURVIVOR count: gradients on a
+    degraded mesh equal the plain mean over the surviving ranks' shards
+    (dividing by the full world size would silently shrink the LR)."""
+    dist(
+        """
+import jax, jax.numpy as jnp, numpy as np
+import repro  # noqa: F401 — installs the jax.sharding.AxisType compat shim
+from jax.sharding import PartitionSpec as P
+
+n, dead = 4, 1
+mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+alive = np.ones((n,), np.float32); alive[dead] = 0.0
+surv = n - 1
+
+def survivor_mean(v):
+    r = jax.lax.axis_index("data")
+    m = jnp.asarray(alive)[r]
+    return jax.lax.psum(v * m, "data") / surv
+
+vals = np.arange(n, dtype=np.float32) + 1.0   # rank r holds r+1
+out = jax.shard_map(survivor_mean, mesh=mesh, in_specs=(P("data"),),
+                    out_specs=P("data"))(jnp.asarray(vals))
+want = (vals.sum() - vals[dead]) / surv
+np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+print("PASS")
+""",
+        devices=4,
+    )

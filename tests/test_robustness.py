@@ -1,0 +1,231 @@
+"""Crash-safety and corrupt-input robustness: atomic checkpoints, hardened
+table/tuner loaders, bench-worker timeouts, the committed fault-sweep
+artifact, and the serve drain-to-checkpoint path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import WorkerTimeoutError, run_worker  # noqa: E402
+
+from repro.comm.tables import TableSchemaError, load_bench, load_fault_table
+from repro.core.tuner import Tuner, TunerTableError
+from repro.train import checkpoint as ckpt
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((4, 3)).astype(np.float32),
+            "b": rng.standard_normal((3,)).astype(np.float32)}
+
+
+def _like(tree):
+    import jax
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+# --------------------------- atomic checkpoints ------------------------------
+
+
+def test_save_checkpoint_is_atomic_and_clean(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 3, _tree())
+    files = os.listdir(d)
+    assert "ckpt_00000003.npz" in files and "ckpt_00000003.json" in files
+    assert not any(f.endswith(".tmp") for f in files)
+    assert ckpt.latest_step(d) == 3
+
+
+def test_crash_between_npz_and_marker_resumes_previous(tmp_path, monkeypatch):
+    """A crash after the npz landed but before the json commit marker must
+    resume from the PREVIOUS complete checkpoint, not the torn one."""
+    d = str(tmp_path)
+    t1 = _tree(1)
+    ckpt.save_checkpoint(d, 1, t1)
+
+    def crash(*a, **kw):
+        raise RuntimeError("simulated crash before the commit marker")
+
+    monkeypatch.setattr(ckpt.json, "dumps", crash)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        ckpt.save_checkpoint(d, 2, _tree(2))
+    monkeypatch.undo()
+    assert os.path.exists(os.path.join(d, "ckpt_00000002.npz"))  # torn save
+    assert ckpt.latest_step(d) == 1
+    restored = ckpt.restore_checkpoint(d, 1, _like(t1))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), t1["w"])
+
+
+def test_crash_mid_npz_write_leaves_only_tmp(tmp_path, monkeypatch):
+    """A crash DURING the npz write leaves a .tmp — the final path never
+    holds a partial file, and latest_step still points at the last commit."""
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 1, _tree(1))
+
+    def torn_write(f, **arrays):
+        f.write(b"PK\x03\x04 partial npz bytes")
+        raise RuntimeError("disk vanished mid-write")
+
+    monkeypatch.setattr(ckpt.np, "savez", torn_write)
+    with pytest.raises(RuntimeError, match="disk vanished"):
+        ckpt.save_checkpoint(d, 2, _tree(2))
+    monkeypatch.undo()
+    assert not os.path.exists(os.path.join(d, "ckpt_00000002.npz"))
+    assert os.path.exists(os.path.join(d, "ckpt_00000002.npz.tmp"))
+    assert ckpt.latest_step(d) == 1
+    # and a later healthy save of the same step wins cleanly
+    ckpt.save_checkpoint(d, 2, _tree(2))
+    assert ckpt.latest_step(d) == 2
+
+
+def test_latest_step_ignores_stray_files(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 5, _tree())
+    # an orphan npz (no marker) and leftover tmps must not count
+    open(os.path.join(d, "ckpt_00000009.npz"), "wb").write(b"torn")
+    open(os.path.join(d, "ckpt_00000010.npz.tmp"), "wb").write(b"torn")
+    assert ckpt.latest_step(d) == 5
+
+
+# ------------------------ hardened loaders -----------------------------------
+
+
+def test_tuner_load_corrupt_json_is_typed(tmp_path):
+    p = tmp_path / "table.json"
+    p.write_text('{"hw": {"name": "TPU_V5E"}, "table": {')   # truncated
+    with pytest.raises(TunerTableError) as ei:
+        Tuner.load(str(p))
+    msg = str(ei.value)
+    assert str(p) in msg and "truncated" in msg.lower() or "corrupt" in msg.lower()
+    assert str(p) in msg
+    assert isinstance(ei.value, ValueError)  # existing callers keep working
+
+
+def test_tuner_load_missing_file_and_bad_schema(tmp_path):
+    with pytest.raises(TunerTableError, match="unreadable"):
+        Tuner.load(str(tmp_path / "nope.json"))
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps([1, 2, 3]))
+    with pytest.raises(TunerTableError):
+        Tuner.load(str(p))
+
+
+def test_table_loaders_corrupt_json_names_file(tmp_path):
+    p = tmp_path / "bench.json"
+    p.write_text('[{"name": "x",')
+    with pytest.raises(TableSchemaError) as ei:
+        load_bench(str(p))
+    assert str(p) in str(ei.value)
+    assert "regenerate" in str(ei.value)
+    with pytest.raises(TableSchemaError):
+        load_fault_table(str(tmp_path / "missing.json"))
+
+
+# ------------------------- fault-sweep artifact gate --------------------------
+
+
+def test_committed_fault_table_loads():
+    table = load_fault_table(os.path.join(REPO, "experiments", "fault_table.json"))
+    keys = set(table)
+    ops = {"bcast", "reduce", "allreduce", "allgather", "reduce_scatter",
+           "allgatherv", "alltoallv"}
+    faults = {"slow_link", "stalled_round", "transient_drop", "dead_rank"}
+    for op in ops:
+        for fault in faults:
+            assert f"{op}/{fault}/n4" in keys, (op, fault)
+    # every dead-rank entry carries a replan on a strictly smaller mesh
+    for key, e in table.items():
+        if "/dead_rank/" in key:
+            assert e["outcome"] == "typed_error" and e["error"] == "DeadRankError"
+            assert e["replanned"]["n"] < int(key.rsplit("/n", 1)[1])
+
+
+def test_fault_table_gate_rejects_wire_byte_drift(tmp_path):
+    src = json.load(open(os.path.join(REPO, "experiments", "fault_table.json")))
+    key = next(k for k in src if "/dead_rank/" in k)
+    src[key]["replanned"]["wire_bytes"] += 1
+    p = tmp_path / "tampered.json"
+    p.write_text(json.dumps(src))
+    with pytest.raises(TableSchemaError, match="wire_bytes"):
+        load_fault_table(str(p))
+
+
+def test_fault_table_gate_rejects_silent_outcomes(tmp_path):
+    entry = {"algo": "ring_allreduce", "seed": 0, "outcome": "mostly_fine"}
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"allreduce/slow_link/n4": entry}))
+    with pytest.raises(TableSchemaError, match="no third state"):
+        load_fault_table(str(p))
+    entry = {"algo": "ring_allreduce", "seed": 0, "outcome": "bit_identical",
+             "baseline_us": 10.0, "faulty_us": 5.0}
+    p.write_text(json.dumps({"allreduce/slow_link/n4": entry}))
+    with pytest.raises(TableSchemaError, match="cannot speed a schedule up"):
+        load_fault_table(str(p))
+
+
+# ------------------------- bench worker timeouts ------------------------------
+
+
+def test_run_worker_timeout_is_typed_and_retried():
+    t0 = time.time()
+    with pytest.raises(WorkerTimeoutError, match="2 attempt"):
+        run_worker("import time; time.sleep(60)", devices=1, timeout=1, retries=1)
+    assert time.time() - t0 >= 2.0  # both attempts ran their full budget
+
+
+def test_run_worker_success_path_unchanged():
+    out = run_worker('import json; print(json.dumps({"ok": 1}))', devices=1)
+    assert out == {"ok": 1}
+
+
+# ---------------------- serve drain-to-checkpoint ----------------------------
+
+
+def test_distribute_weights_drains_on_failure(dist):
+    """An unrecoverable failure mid-distribution drains the pre-distribution
+    weights to an atomic checkpoint and raises the typed WeightSyncError;
+    the drained checkpoint restores bit-identically."""
+    dist(
+        """
+import os, tempfile
+import numpy as np, jax
+import repro.serve.engine as eng
+from repro.comm.faults import WeightSyncError
+from repro.train import checkpoint as ckpt
+from repro.launch.mesh import make_local_mesh
+
+mesh = make_local_mesh(1)
+params = {"w": np.arange(48, dtype=np.float32).reshape(6, 8),
+          "b": np.ones((8,), np.float32)}
+
+def boom(*a, **kw):
+    raise RuntimeError("fabric lost a device mid-broadcast")
+
+eng.comm.apply_plan = boom
+drain = tempfile.mkdtemp()
+try:
+    eng.distribute_weights(dict(params), mesh, drain_dir=drain)
+except WeightSyncError as e:
+    assert "drained" in str(e), e
+    assert e.__cause__ is not None
+else:
+    raise AssertionError("expected WeightSyncError")
+assert ckpt.latest_step(drain) == 0
+like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+restored = ckpt.restore_checkpoint(drain, 0, like)
+np.testing.assert_array_equal(np.asarray(restored["w"]), params["w"])
+np.testing.assert_array_equal(np.asarray(restored["b"]), params["b"])
+print("PASS")
+""",
+        devices=4,
+    )
