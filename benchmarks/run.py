@@ -7,6 +7,7 @@
   allreduce: gradient-sync strategies + per-op empirical table (repro.comm)
   overlap: bucket-streamed sync, planned vs simulated   (comm.overlap)
   compile: unrolled-vs-compiled executor program size   (comm.executors)
+  inkernel: persistent single-launch executor replay    (comm.executors)
   ragged: allgatherv/alltoallv skew-regime sweep        (comm ragged ops)
   faults: fault-injection contract sweep                (comm.faults)
 
@@ -39,6 +40,7 @@ def main() -> None:
         bench_allreduce,
         bench_compile,
         bench_faults,
+        bench_inkernel,
         bench_internode,
         bench_intranode,
         bench_overlap,
@@ -52,6 +54,7 @@ def main() -> None:
         "allreduce": bench_allreduce.rows,
         "overlap": bench_overlap.rows,
         "compile": bench_compile.rows,
+        "inkernel": bench_inkernel.rows,
         "ragged": bench_ragged.rows,
         "faults": bench_faults.rows,
         "fig1": bench_intranode.rows,

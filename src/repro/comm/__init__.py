@@ -33,7 +33,7 @@ from .api import (
     preduce,
     preduce_scatter,
 )
-from .executors import execute_collective, execute_compiled
+from .executors import execute_collective, execute_compiled, execute_inkernel
 from .faults import (
     DeadRankError,
     FallbackExhaustedError,
@@ -66,6 +66,7 @@ from .tables import (
     load_bench,
     load_compile_table,
     load_fault_table,
+    load_inkernel_table,
     load_overlap_table,
     load_tuner_table,
     tuner_from_table,
@@ -86,6 +87,7 @@ __all__ = [
     "expected_wire_bytes",
     "execute_collective",
     "execute_compiled",
+    "execute_inkernel",
     "apply_plan",
     "apply_plan_resilient",
     "pbcast",
@@ -109,6 +111,7 @@ __all__ = [
     "load_overlap_table",
     "load_compile_table",
     "load_fault_table",
+    "load_inkernel_table",
     "tuner_from_table",
     "FaultError",
     "DeadRankError",

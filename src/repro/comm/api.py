@@ -20,7 +20,7 @@ from jax import lax
 
 from ..core import algorithms, bucketing
 from ..core.tuner import Tuner
-from .executors import execute_collective, execute_compiled
+from .executors import execute_collective, execute_compiled, execute_inkernel
 from .plan import ONE_SHOT, CollectivePlan, plan_cached
 from .schedules import alltoallv_matrix
 
@@ -67,6 +67,42 @@ def _use_compiled(plan: CollectivePlan, *, fused: bool, compiled: bool | None) -
     if lowered.zero_waste:
         return lowered.num_rounds >= _MIN_COMPILED_ROUNDS_ZERO_WASTE
     return lowered.num_rounds > _MAX_UNROLLED_ROUNDS
+
+
+_EXECUTORS = {
+    "inkernel": execute_inkernel,
+    "compiled": execute_compiled,
+    "unrolled": execute_collective,
+}
+
+
+def _resolve_exec_path(
+    plan: CollectivePlan,
+    *,
+    fused: bool = True,
+    compiled: bool | None = None,
+    inkernel: bool | None = None,
+) -> str:
+    """Three-tier executor routing: an explicit ``inkernel=`` flag wins;
+    then a tuned ``Decision.exec_path``; then the compiled/unrolled policy
+    (:func:`_use_compiled` — which itself honors an explicit ``compiled=``
+    and ``Decision.fused_path``). Returns 'inkernel'|'compiled'|'unrolled'.
+
+    The auto policy never picks inkernel on its own: the in-kernel executor
+    enters only through the explicit flag or a tuned table entry.
+    ``inkernel=False`` vetoes a tuned 'inkernel' without disturbing a tuned
+    'compiled'/'unrolled'; an explicit ``compiled=`` bypasses the tuned tier
+    entirely (it is a stronger, caller-level pin).
+    """
+    if inkernel:
+        return "inkernel"
+    if compiled is None and fused:
+        tuned = plan.decision.exec_path
+        if tuned == "inkernel" and inkernel is None:
+            return "inkernel"
+        if tuned in ("compiled", "unrolled"):
+            return tuned
+    return "compiled" if _use_compiled(plan, fused=fused, compiled=compiled) else "unrolled"
 
 
 def _flat(x: jax.Array):
@@ -244,6 +280,7 @@ def apply_plan(
     *,
     fused: bool = True,
     compiled: bool | None = None,
+    inkernel: bool | None = None,
 ) -> jax.Array:
     """Execute a pre-built :class:`CollectivePlan` on ``x`` inside
     ``shard_map`` — exactly the schedule the plan carries, no re-deciding.
@@ -256,10 +293,14 @@ def apply_plan(
     destination-major compact rows and returns the source-major compact rows
     (use :func:`palltoallv` for the padded block layouts).
 
-    Executor routing (see :func:`_use_compiled`): ``compiled=True`` forces
-    the fori_loop compiled replay (``execute_compiled`` — O(1) HLO in chunk
-    count), ``compiled=False`` the exact unrolled replay, ``None`` the tuned
-    / round-count policy. Donation contract: consumers jit the surrounding
+    Executor routing (see :func:`_resolve_exec_path`): ``inkernel=True``
+    forces the single-launch persistent-kernel replay (``execute_inkernel``),
+    ``inkernel=False`` vetoes a tuned inkernel pin; otherwise
+    ``compiled=True`` forces the fori_loop compiled replay
+    (``execute_compiled`` — O(1) HLO in chunk count), ``compiled=False`` the
+    exact unrolled replay, ``None`` the tuned (``Decision.exec_path`` /
+    ``fused_path``) / round-count policy. Donation contract: consumers jit
+    the surrounding
     program with the communicated buffers donated
     (``jax.jit(..., donate_argnums)``) so the compiled replay's loop carry
     and the fused kernel's aliasing update the buffer in place.
@@ -279,7 +320,9 @@ def apply_plan(
             return algorithms.xla_allgather_bcast(x, axis_name, root=plan.root)
         return lax.all_gather(x, axis_name, axis=0)
     sched = plan.schedule
-    run = execute_compiled if _use_compiled(plan, fused=fused, compiled=compiled) else execute_collective
+    run = _EXECUTORS[
+        _resolve_exec_path(plan, fused=fused, compiled=compiled, inkernel=inkernel)
+    ]
     if plan.op == "allgatherv":
         return _run_allgatherv(plan, x, axis_name, run)
     if plan.op == "alltoallv":
@@ -333,8 +376,8 @@ def apply_plan_resilient(
 ) -> jax.Array:
     """:func:`apply_plan` behind a typed fallback chain.
 
-    Walks ``policy.chain`` (default compiled -> unrolled -> XLA one-shot)
-    with per-stage retries and exponential backoff; the first stage that
+    Walks ``policy.chain`` (default inkernel -> compiled -> unrolled -> XLA
+    one-shot) with per-stage retries and exponential backoff; the first stage that
     completes wins. Typed :class:`~.faults.FaultError`\\ s propagate
     immediately (they are diagnoses with recovery actions, not transient
     failures); any other exception burns a retry and then degrades the
@@ -364,8 +407,16 @@ def apply_plan_resilient(
                 if stage == "xla":
                     out = _one_shot_fallback(plan, x, axis_name)
                 else:
-                    out = apply_plan(plan, x, axis_name, fused=fused,
-                                     compiled=(stage == "compiled"))
+                    # pin the executor to exactly this stage: inkernel=True
+                    # for the head, inkernel=False + explicit compiled flag
+                    # below it (a tuned exec_path must not re-route a
+                    # degraded stage back onto the executor that just failed)
+                    out = apply_plan(
+                        plan, x, axis_name, fused=fused,
+                        compiled=(None if stage == "inkernel"
+                                  else stage == "compiled"),
+                        inkernel=(stage == "inkernel"),
+                    )
             except FaultError:
                 raise
             except Exception as e:  # noqa: BLE001 — the chain is the handler
@@ -406,6 +457,7 @@ def pbcast(
     inter_pod: bool = False,
     fused: bool = True,
     compiled: bool | None = None,
+    inkernel: bool | None = None,
 ) -> jax.Array:
     """Broadcast ``x`` from ``root`` over the named mesh axis (must be called
     inside ``shard_map``; every rank passes a same-shape buffer and receives
@@ -423,7 +475,8 @@ def pbcast(
         "bcast", M, n, root=root, algo=algo, num_chunks=num_chunks,
         tuner=tuner, inter_pod=inter_pod,
     )
-    return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled)
+    return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled,
+                      inkernel=inkernel)
 
 
 def preduce(
@@ -437,6 +490,7 @@ def preduce(
     inter_pod: bool = False,
     combiner: str = "sum",
     compiled: bool | None = None,
+    inkernel: bool | None = None,
 ) -> jax.Array:
     """Reduce-to-root (``combiner``: sum by default). Non-root ranks return
     garbage partial sums by design (MPI_Reduce semantics) — only the root's
@@ -458,7 +512,7 @@ def preduce(
         "reduce", M, n, root=root, algo=algo, num_chunks=num_chunks,
         tuner=tuner, inter_pod=inter_pod,
     )
-    return apply_plan(plan, x, axis_name, compiled=compiled)
+    return apply_plan(plan, x, axis_name, compiled=compiled, inkernel=inkernel)
 
 
 # ---------------------------------------------------------------------------
@@ -477,6 +531,7 @@ def pallreduce(
     fused: bool = True,
     combiner: str = "sum",
     compiled: bool | None = None,
+    inkernel: bool | None = None,
 ) -> jax.Array:
     """All-reduce (``combiner``: sum by default) over the named axis through
     the tuned plan layer.
@@ -503,7 +558,8 @@ def pallreduce(
         "allreduce", M, n, algo=algo, num_chunks=num_chunks,
         tuner=tuner, inter_pod=inter_pod,
     )
-    return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled)
+    return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled,
+                      inkernel=inkernel)
 
 
 def pallgather(
@@ -514,6 +570,7 @@ def pallgather(
     tuner: Tuner | None = None,
     inter_pod: bool = False,
     compiled: bool | None = None,
+    inkernel: bool | None = None,
 ) -> jax.Array:
     """All-gather the per-rank shard ``x`` into a stacked ``(n, *x.shape)``
     array (the ``lax.all_gather(axis=0)`` convention).
@@ -531,7 +588,7 @@ def pallgather(
     plan = plan_cached(
         "allgather", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
     )
-    return apply_plan(plan, x, axis_name, compiled=compiled)
+    return apply_plan(plan, x, axis_name, compiled=compiled, inkernel=inkernel)
 
 
 def preduce_scatter(
@@ -543,6 +600,7 @@ def preduce_scatter(
     inter_pod: bool = False,
     combiner: str = "sum",
     compiled: bool | None = None,
+    inkernel: bool | None = None,
 ) -> jax.Array:
     """Reduce-scatter (``combiner``: sum by default): every rank contributes
     the full flat buffer and receives its rank-indexed shard of the combined
@@ -567,7 +625,7 @@ def preduce_scatter(
     )
     if plan.algo == "noop":
         return flat
-    return apply_plan(plan, x, axis_name, compiled=compiled)
+    return apply_plan(plan, x, axis_name, compiled=compiled, inkernel=inkernel)
 
 
 # ---------------------------------------------------------------------------
@@ -586,6 +644,7 @@ def pallgatherv(
     inter_pod: bool = False,
     fused: bool = True,
     compiled: bool | None = None,
+    inkernel: bool | None = None,
 ) -> jax.Array:
     """Ragged all-gather: rank ``r`` contributes the first ``sizes[r]`` rows
     of ``x`` (rows beyond the valid prefix are ignored) and every rank
@@ -619,7 +678,8 @@ def pallgatherv(
         "allgatherv", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
         sizes=sz,
     )
-    return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled)
+    return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled,
+                      inkernel=inkernel)
 
 
 def palltoallv(
@@ -634,6 +694,7 @@ def palltoallv(
     out_padded: bool = False,
     fused: bool = True,
     compiled: bool | None = None,
+    inkernel: bool | None = None,
 ) -> jax.Array:
     """Ragged all-to-all: ``sizes`` gives the block matrix ``m[s][d]`` (rows
     rank ``s`` sends to rank ``d``) as an n x n nested sequence, a flat
@@ -681,7 +742,9 @@ def palltoallv(
         "alltoallv", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
         sizes=flat,
     )
-    run = execute_compiled if _use_compiled(plan, fused=fused, compiled=compiled) else execute_collective
+    run = _EXECUTORS[
+        _resolve_exec_path(plan, fused=fused, compiled=compiled, inkernel=inkernel)
+    ]
     return _run_alltoallv(plan, x, axis_name, run,
                           in_padded=in_padded, out_padded=out_padded)
 

@@ -1,6 +1,6 @@
 """shard_map executors for the generalized (combine-aware) schedule IR.
 
-Two replay strategies for ANY :class:`core.schedules.Schedule` — bcast,
+Three replay strategies for ANY :class:`core.schedules.Schedule` — bcast,
 reduce, allreduce, allgather, reduce_scatter:
 
 * :func:`execute_collective` — the *unrolled* (exact) executor: one
@@ -17,6 +17,12 @@ reduce, allreduce, allgather, reduce_scatter:
   exactly like the old hand-written fori_loop executors
   (``pipelined_chain_fused`` / the deleted ``fused_rsb_fused``) — which are
   special cases of this generic path.
+* :func:`execute_inkernel` — the *in-kernel* executor: the whole schedule
+  replays inside ONE persistent Pallas launch
+  (:mod:`repro.kernels.inkernel_collective`); the kernel itself moves each
+  round's block (TPU async remote copy; shared-buffer emulation under
+  interpret) and merges in the same VMEM pass. HLO size is O(1) in rounds
+  AND classes, and the per-round launch boundary disappears.
 
 Lanes within a round are applied sequentially at trace level; builders
 guarantee no same-round read-after-write at any rank (the numpy simulator
@@ -34,8 +40,9 @@ from jax import lax
 
 from ..core.schedules import LoweredSchedule, Schedule, lower_schedule
 from ..kernels.combine_update import fused_combine_update
+from ..kernels.inkernel_collective import inkernel_replay
 
-__all__ = ["execute_collective", "execute_compiled"]
+__all__ = ["execute_collective", "execute_compiled", "execute_inkernel"]
 
 
 def _per_rank(values, axis_name):
@@ -146,3 +153,31 @@ def execute_compiled(
         return b
 
     return lax.fori_loop(0, lowered.num_rounds, body, buf, unroll=unroll)
+
+
+def execute_inkernel(
+    schedule: Schedule | LoweredSchedule,
+    buf: jax.Array,
+    axis_name,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """In-kernel replay: ONE persistent Pallas launch for the whole schedule.
+
+    Same calling convention and bit-identity contract as the other two
+    executors (``buf``: (num_chunks, chunk_elems), inside ``shard_map`` with
+    ``check_vma=False``). On TPU the kernel issues the round transfers itself
+    via async remote copy; off-TPU the mesh is emulated through an
+    ``all_gather``-assembled shared buffer and the identical kernel control
+    flow runs under the Pallas interpreter.
+    """
+    lowered = (
+        schedule if isinstance(schedule, LoweredSchedule) else lower_schedule(schedule)
+    )
+    assert buf.ndim == 2 and buf.shape[0] == lowered.num_chunks, (
+        buf.shape,
+        lowered.num_chunks,
+    )
+    if lowered.num_rounds == 0:
+        return buf
+    return inkernel_replay(lowered, buf, axis_name, interpret=interpret)

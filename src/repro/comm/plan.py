@@ -149,14 +149,21 @@ def decide(
     tuner: Tuner | None = None,
     inter_pod: bool = False,
     sizes=None,
+    exec_path: str | None = None,
 ) -> Decision:
     """Resolve (op, M, n) to a Decision. ``algo='auto'`` consults the tuner;
     a manual algo gets analytic chunking AND an analytic ``predicted_s`` (so
     manual and auto decisions are comparable in reports — the old bcast path
     returned NaN here). Ragged ops take their row-count vector via
-    ``sizes`` (see :meth:`Tuner.select`)."""
+    ``sizes`` (see :meth:`Tuner.select`). An explicit ``exec_path``
+    ('inkernel'|'compiled'|'unrolled') pins the executor tier on the
+    Decision, overriding whatever the tuner's table carries."""
     if op not in OPS:
         raise ValueError(f"unknown collective op {op!r}; have {OPS}")
+    if exec_path is not None and exec_path not in ("inkernel", "compiled", "unrolled"):
+        raise ValueError(
+            f"exec_path must be 'inkernel'|'compiled'|'unrolled', got {exec_path!r}"
+        )
     if algo in ONE_SHOT and op not in _ONE_SHOT_OPS[algo]:
         raise ValueError(
             f"one-shot {algo!r} cannot implement op {op!r} (valid for {_ONE_SHOT_OPS[algo]})"
@@ -166,7 +173,10 @@ def decide(
     if n <= 1:
         return Decision("noop", 1, max(M, 1), 0.0, "analytic")
     if algo == "auto":
-        return t.select(M, n, op=op, inter_pod=inter_pod, sizes=sizes)
+        dec = t.select(M, n, op=op, inter_pod=inter_pod, sizes=sizes)
+        if exec_path is not None and dec.algo != "noop":
+            dec = dataclasses.replace(dec, exec_path=exec_path)
+        return dec
     B = t.hw.path_bw(inter_pod)
     if num_chunks is None:
         if algo in _RAGGED_ALGOS:
@@ -200,7 +210,8 @@ def decide(
         predicted = cost_model.cost(algo, M, n, t.hw, inter_pod=inter_pod, **kw)
     else:
         predicted = float("nan")  # one-shot baselines have no Eq. 1-6 model
-    return Decision(algo, num_chunks, chunk, predicted, "manual")
+    return Decision(algo, num_chunks, chunk, predicted, "manual",
+                    exec_path=exec_path)
 
 
 def plan_collective(
@@ -214,11 +225,12 @@ def plan_collective(
     tuner: Tuner | None = None,
     inter_pod: bool = False,
     sizes=None,
+    exec_path: str | None = None,
 ) -> CollectivePlan:
     """Decide + build the executable schedule for one collective."""
     sizes = _norm_sizes(op, sizes, n)
     dec = decide(op, M, n, algo=algo, num_chunks=num_chunks, tuner=tuner,
-                 inter_pod=inter_pod, sizes=sizes)
+                 inter_pod=inter_pod, sizes=sizes, exec_path=exec_path)
     t = tuner or default_tuner()
     if dec.algo == "noop" or dec.algo in ONE_SHOT:
         return CollectivePlan(op, M, n, root, inter_pod, dec, None, sizes)
@@ -287,6 +299,7 @@ def plan_degraded(
     tuner: Tuner | None = None,
     inter_pod: bool = False,
     sizes=None,
+    exec_path: str | None = None,
 ) -> CollectivePlan:
     """Replan one collective for a degraded mesh (:class:`comm.faults.MeshHealth`).
 
@@ -309,7 +322,8 @@ def plan_degraded(
         raise ValueError(f"health report is for n={health.n}, plan asked n={n}")
     if health.healthy:
         return plan_collective(op, M, n, root=root, algo=algo, num_chunks=num_chunks,
-                               tuner=tuner, inter_pod=inter_pod, sizes=sizes)
+                               tuner=tuner, inter_pod=inter_pod, sizes=sizes,
+                               exec_path=exec_path)
     t = tuner or default_tuner()
     sizes = _norm_sizes(op, sizes, n)
     survivors = health.survivors()
@@ -317,7 +331,8 @@ def plan_degraded(
     if not health.dead_ranks:
         # slow links only: same mesh, same schedule, degraded pricing
         plan = plan_collective(op, M, n, root=root, algo=algo, num_chunks=num_chunks,
-                               tuner=t, inter_pod=inter_pod, sizes=sizes)
+                               tuner=t, inter_pod=inter_pod, sizes=sizes,
+                               exec_path=exec_path)
         dec = _reprice_degraded(plan.decision, op, M, n, t, inter_pod, sizes, slow)
         return dataclasses.replace(plan, decision=dec)
     if len(survivors) == 0:
@@ -347,7 +362,8 @@ def plan_degraded(
     pos = {r: i for i, r in enumerate(survivors)}
     slow2 = tuple(((pos[s], pos[d]), f) for (s, d), f in slow)
     plan = plan_collective(op, M2, n2, root=new_root, algo=algo, num_chunks=num_chunks,
-                           tuner=t, inter_pod=inter_pod, sizes=sizes2)
+                           tuner=t, inter_pod=inter_pod, sizes=sizes2,
+                           exec_path=exec_path)
     dec = _reprice_degraded(plan.decision, op, M2, n2, t, inter_pod, plan.sizes, slow2)
     return dataclasses.replace(plan, decision=dec, survivors=survivors)
 
@@ -380,10 +396,11 @@ def plan_cached(
     inter_pod: bool = False,
     sizes=None,
     health=None,
+    exec_path: str | None = None,
 ) -> CollectivePlan:
     """LRU-cached :func:`plan_collective`. Key: (op, M, n, root, algo,
-    num_chunks, inter_pod, sizes vector, tuner fingerprint, health
-    fingerprint). The buffer dtype is already folded into ``M`` (a byte
+    num_chunks, inter_pod, sizes vector, exec_path, tuner fingerprint,
+    health fingerprint). The buffer dtype is already folded into ``M`` (a byte
     count), so same-point calls from different dtypes correctly share one
     plan; ragged plans for different size vectors never collide (the
     canonical flat vector is in the key). Plans are frozen and their
@@ -395,7 +412,13 @@ def plan_cached(
     through :func:`plan_degraded`; its content fingerprint sits in the key
     beside the tuner fingerprint, so a health transition (a rank dying, a
     link degrading or recovering) can never serve a plan built for the
-    pre-fault mesh."""
+    pre-fault mesh. ``exec_path`` pins the executor tier on the Decision
+    (see :func:`decide`); it is a key component so callers pinning
+    different tiers never share a plan object."""
+    if exec_path is not None and exec_path not in ("inkernel", "compiled", "unrolled"):
+        raise ValueError(
+            f"exec_path must be 'inkernel'|'compiled'|'unrolled', got {exec_path!r}"
+        )
     t = tuner or default_tuner()
     sizes = _norm_sizes(op, sizes, n)
     key = (
@@ -407,6 +430,7 @@ def plan_cached(
         None if num_chunks is None else int(num_chunks),
         bool(inter_pod),
         sizes,
+        exec_path,
         t.fingerprint(),
         None if health is None else health.fingerprint(),
     )
@@ -419,12 +443,12 @@ def plan_cached(
     if health is not None and not health.healthy:
         plan = plan_degraded(
             op, M, n, health, root=root, algo=algo, num_chunks=num_chunks,
-            tuner=t, inter_pod=inter_pod, sizes=sizes,
+            tuner=t, inter_pod=inter_pod, sizes=sizes, exec_path=exec_path,
         )
     else:
         plan = plan_collective(
             op, M, n, root=root, algo=algo, num_chunks=num_chunks, tuner=t,
-            inter_pod=inter_pod, sizes=sizes,
+            inter_pod=inter_pod, sizes=sizes, exec_path=exec_path,
         )
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:

@@ -3,7 +3,8 @@ watchdog.
 
 The execution side of the fault subsystem (`comm.faults` is the *model*
 side): :func:`comm.api.apply_plan_resilient` walks a typed fallback chain —
-compiled executor -> unrolled executor -> XLA one-shot — under the
+in-kernel executor -> compiled executor -> unrolled executor -> XLA
+one-shot — under the
 retry/timeout/backoff policy defined here, and a :class:`Watchdog` compares
 observed timings against the plan's cost-model expectation to flag
 stragglers into ``Tuner.record`` (which bumps the tuner fingerprint and so
@@ -40,10 +41,11 @@ __all__ = [
     "Watchdog",
 ]
 
-# fallback stages, strongest first: the compiled executor (fused Pallas
-# combine, O(1) HLO), the unrolled schedule executor, then the native XLA
+# fallback stages, strongest first: the in-kernel executor (one persistent
+# Pallas launch per schedule), the compiled executor (fused Pallas combine,
+# O(lane classes) HLO), the unrolled schedule executor, then the native XLA
 # one-shot collective for the op
-DEFAULT_CHAIN = ("compiled", "unrolled", "xla")
+DEFAULT_CHAIN = ("inkernel", "compiled", "unrolled", "xla")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,6 +21,8 @@ __all__ = [
     "Hardware",
     "TPU_V5E",
     "CPU_SIM",
+    "calibrate_t_launch",
+    "t_exec_path",
     "cost",
     "optimal_chunk_bytes",
     "optimal_chunk_bytes_fused",
@@ -44,6 +46,12 @@ class Hardware:
     host_bw: float       # host staging path ("B_PCIe" analogue, bytes/s)
     peak_flops: float    # per chip, bf16
     hbm_bw: float        # per chip
+    # per kernel-launch overhead (s): what each round of a host-mediated
+    # executor pays at the launch boundary and the in-kernel executor pays
+    # once per schedule. Defaulted so keyword-constructed Hardware values
+    # (and saved configs) stay valid; see calibrate_t_launch for deriving it
+    # from a committed compile table.
+    t_launch: float = 5e-6
 
     def path_bw(self, inter_pod: bool) -> float:
         return self.interpod_bw if inter_pod else self.link_bw
@@ -60,6 +68,7 @@ TPU_V5E = Hardware(
     host_bw=16e9,
     peak_flops=197e12,
     hbm_bw=819e9,
+    t_launch=8e-6,
 )
 
 # Constants for interpreting CPU microbenchmarks (used only to sanity-check
@@ -73,7 +82,76 @@ CPU_SIM = Hardware(
     host_bw=8e9,
     peak_flops=1e11,
     hbm_bw=2e10,
+    t_launch=100e-6,
 )
+
+
+# ---------------------------------------------------------------------------
+# Executor launch overhead (the term the in-kernel executor deletes)
+# ---------------------------------------------------------------------------
+
+
+def calibrate_t_launch(table: dict) -> float:
+    """Per-round launch/lowering overhead (s/round) from a committed compile
+    table (``experiments/compile_table.json``).
+
+    Each ``n<r>/<op>/<algo>/K<k>`` group that sweeps several chunk counts
+    gives (num_rounds, unrolled_lower_s) pairs; the unrolled executor's
+    lower time grows linearly in the round count, so the least-squares slope
+    of each multi-K group is that group's per-round boundary cost. The
+    calibrated constant is the median across groups — robust to one
+    pathological algorithm family.
+    """
+    groups: dict[tuple, list[tuple[float, float]]] = {}
+    for key, e in table.items():
+        parts = key.split("/")
+        if len(parts) != 4:
+            continue
+        groups.setdefault(tuple(parts[:3]), []).append(
+            (float(e["num_rounds"]), float(e["unrolled_lower_s"]))
+        )
+    slopes = []
+    for pts in groups.values():
+        if len(pts) < 2:
+            continue
+        xs, ys = zip(*pts)
+        mx, my = sum(xs) / len(xs), sum(ys) / len(ys)
+        den = sum((x - mx) ** 2 for x in xs)
+        if den <= 0:
+            continue
+        slopes.append(sum((x - mx) * (y - my) for x, y in pts) / den)
+    if not slopes:
+        raise ValueError(
+            "calibrate_t_launch: table has no multi-K group to fit a slope on"
+        )
+    slopes.sort()
+    mid = len(slopes) // 2
+    return slopes[mid] if len(slopes) % 2 else 0.5 * (slopes[mid - 1] + slopes[mid])
+
+
+def t_exec_path(path: str, num_rounds: int, num_classes: int, hw: Hardware) -> float:
+    """Launch-boundary overhead of one executor choice (s), additive on top
+    of the wire-time closed forms — what lets the tuner price inkernel vs
+    compiled vs unrolled honestly:
+
+      * ``unrolled`` — every round re-emits one ppermute + one merge per
+        lane class into the program (2 boundaries per class per round);
+      * ``compiled`` — one fori_loop, but still a ppermute -> combine-kernel
+        launch pair per round at runtime;
+      * ``inkernel`` — a single persistent kernel launch for the whole
+        schedule.
+    """
+    rounds = max(int(num_rounds), 0)
+    classes = max(int(num_classes), 1)
+    if path == "inkernel":
+        return hw.t_launch
+    if path == "compiled":
+        return 2.0 * rounds * hw.t_launch
+    if path == "unrolled":
+        return 2.0 * rounds * classes * hw.t_launch
+    raise ValueError(
+        f"exec path must be 'inkernel'|'compiled'|'unrolled', got {path!r}"
+    )
 
 
 # ---------------------------------------------------------------------------

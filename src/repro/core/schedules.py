@@ -40,8 +40,10 @@ __all__ = [
     "Schedule",
     "LaneClass",
     "LoweredSchedule",
+    "KernelTables",
     "lane_partition",
     "lower_schedule",
+    "pack_tables",
     "direct",
     "chain",
     "pipelined_chain",
@@ -358,6 +360,74 @@ def lower_schedule(schedule: Schedule) -> LoweredSchedule:
 
     return LoweredSchedule(
         schedule.name, schedule.kind, n, K, tuple(out), round_lanes
+    )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class KernelTables:
+    """Kernel-ready stacked layout of a lowering's per-class round tables.
+
+    The in-kernel executor (``repro.kernels.inkernel_collective``) replays a
+    whole schedule inside ONE Pallas launch, so it needs every class's tables
+    as dense operands it can index absolutely from the kernel body:
+
+      * ``send_start``/``recv_start``/``lo``/``hi`` — int32
+        ``(num_classes, num_rounds, n)``, the per-class ``LaneClass`` tables
+        stacked on a leading class axis (scalar-prefetch operands on TPU);
+      * ``combine`` — int32 ``(num_classes, num_rounds)``;
+      * ``perms``/``blocks`` — the static per-class permutation fragments
+        and block heights, which become kernel *structure* (python loops),
+        not data.
+
+    Classes with ``block == 0`` never occur (lowering drops empty rounds and
+    every transfer moves >= 1 chunk), but a ragged schedule may address
+    zero-height windows through ``lo == hi`` — the kernel's row mask handles
+    those identically to the numpy simulator's skip.
+    """
+
+    n: int
+    num_chunks: int
+    perms: Tuple[Tuple[Tuple[int, int], ...], ...]
+    blocks: Tuple[int, ...]
+    send_start: np.ndarray          # (num_classes, num_rounds, n) int32
+    recv_start: np.ndarray          # (num_classes, num_rounds, n) int32
+    lo: np.ndarray                  # (num_classes, num_rounds, n) int32
+    hi: np.ndarray                  # (num_classes, num_rounds, n) int32
+    combine: np.ndarray             # (num_classes, num_rounds) int32
+
+    @property
+    def num_classes(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def num_rounds(self) -> int:
+        return self.send_start.shape[1]
+
+
+@functools.lru_cache(maxsize=256)
+def pack_tables(lowered: LoweredSchedule) -> KernelTables:
+    """Stack a lowering's per-class tables into the kernel-resident layout.
+
+    Cached on the ``LoweredSchedule`` identity (``lower_schedule`` is itself
+    cached, so repeated plans share one packing)."""
+    n, T = lowered.n, lowered.num_rounds
+    cs = lowered.classes
+    if not cs:
+        z3 = np.zeros((0, T, n), np.int32)
+        return KernelTables(
+            n, lowered.num_chunks, (), (), z3, z3, z3, z3,
+            np.zeros((0, T), np.int32),
+        )
+    return KernelTables(
+        n,
+        lowered.num_chunks,
+        tuple(c.perm for c in cs),
+        tuple(c.block for c in cs),
+        np.ascontiguousarray(np.stack([c.send_start for c in cs]), np.int32),
+        np.ascontiguousarray(np.stack([c.recv_start for c in cs]), np.int32),
+        np.ascontiguousarray(np.stack([c.lo for c in cs]), np.int32),
+        np.ascontiguousarray(np.stack([c.hi for c in cs]), np.int32),
+        np.ascontiguousarray(np.stack([c.combine for c in cs]), np.int32),
     )
 
 

@@ -62,6 +62,13 @@ class Decision:
     ``False`` to the exact unrolled replay, ``None`` (default) defers to
     ``comm.api.apply_plan``'s round-count/zero-waste policy. Calibration can
     record it per point the way it records ``num_chunks``.
+
+    ``exec_path`` generalizes ``fused_path`` to the three-executor routing
+    tier: 'inkernel' | 'compiled' | 'unrolled' pins the point to that
+    executor (``comm.api._resolve_exec_path``'s middle tier — an explicit
+    ``inkernel=`` call-site flag still outranks it); ``None`` defers to
+    ``fused_path``/policy. The auto policy never selects inkernel on its
+    own: it enters via this tuned field or the explicit flag.
     """
 
     algo: str
@@ -71,6 +78,7 @@ class Decision:
     source: str  # 'analytic' | 'empirical'
     overlap_depth: int | None = None
     fused_path: bool | None = None
+    exec_path: str | None = None
 
 
 # algorithms the executor can run, with practical applicability predicates
@@ -295,7 +303,7 @@ class Tuner:
         self._fingerprint = (self._version, fp)
         return fp
 
-    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast", overlap_depth: int | None = None, fused_path: bool | None = None, sizes: Sequence[int] | None = None) -> None:
+    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast", overlap_depth: int | None = None, fused_path: bool | None = None, exec_path: str | None = None, sizes: Sequence[int] | None = None) -> None:
         key = self._key(M, n, inter_pod, op, self._flat_sizes(sizes))
         prev = self.table.get(key)
         # depth-only entries (record_overlap before any measurement) carry no
@@ -333,6 +341,22 @@ class Tuner:
                 fused_path = prev["fused_path"]
             if fused_path is not None:
                 entry["fused_path"] = bool(fused_path)
+            if (
+                exec_path is None
+                and prev is not None
+                and "exec_path" in prev
+                and prev.get("algo") == algo
+            ):
+                # same-algorithm-only carryover, exactly like fused_path: a
+                # routing tier tuned against another algorithm's round/class
+                # profile must not float onto this one
+                exec_path = prev["exec_path"]
+            if exec_path is not None:
+                if exec_path not in ("inkernel", "compiled", "unrolled"):
+                    raise ValueError(
+                        f"exec_path must be 'inkernel'|'compiled'|'unrolled', got {exec_path!r}"
+                    )
+                entry["exec_path"] = str(exec_path)
             self.table[key] = entry
             self._version += 1
 
@@ -427,6 +451,7 @@ class Tuner:
                 "empirical",
                 overlap_depth=depth,
                 fused_path=hit.get("fused_path"),
+                exec_path=hit.get("exec_path"),
             )
         # depth-only entries (record_overlap with no measurement yet) keep
         # the analytic pricing and only annotate the decision with the depth
@@ -499,6 +524,13 @@ class Tuner:
                 raise TunerTableError(f"{path}: entry {key!r} overlap_depth must be a positive int")
             if "fused_path" in entry and not isinstance(entry["fused_path"], bool):
                 raise TunerTableError(f"{path}: entry {key!r} fused_path must be a bool")
+            if "exec_path" in entry and entry["exec_path"] not in (
+                "inkernel", "compiled", "unrolled"
+            ):
+                raise TunerTableError(
+                    f"{path}: entry {key!r} exec_path must be "
+                    f"'inkernel'|'compiled'|'unrolled', got {entry['exec_path']!r}"
+                )
             if set(entry) == {"overlap_depth"}:
                 continue  # depth-only entry (record_overlap, no measurement)
             if not {"algo", "num_chunks", "measured_s"} <= set(entry):

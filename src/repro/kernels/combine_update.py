@@ -57,8 +57,11 @@ def fused_combine(cur: jax.Array, recv: jax.Array, row_mode: jax.Array, *,
     of KEEP (0) / OVERWRITE (1) / ACCUMULATE (2). Must be called inside a
     trace (jit/shard_map) like the executors that own it.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    # function-level import: ops imports this module at load time, so the
+    # shared interpret resolver has to be pulled in lazily here
+    from .ops import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     B, C = cur.shape
     colb = min(C, _COL_BLOCK)
     return pl.pallas_call(

@@ -1,0 +1,300 @@
+"""Persistent in-kernel collective executor: one Pallas launch per schedule.
+
+The compiled executor (``comm.executors.execute_compiled``) already collapsed
+HLO size to O(lane classes), but each replay round still pays a
+``lax.ppermute`` -> combine-kernel launch boundary and two HBM round-trips.
+This module deletes that overhead: ONE Pallas kernel launch replays the whole
+lowered schedule — the kernel itself moves each round's block (async remote
+copy on TPU, a shared-buffer write in the interpret-mode emulation) and merges
+it into the destination window in the same VMEM pass, using exactly the
+where-chain of ``repro.kernels.combine_update`` so the result stays
+bit-identical to the unrolled oracle.
+
+The static metadata the kernel needs is the PR 5 lowering, stacked into the
+kernel-resident layout of :class:`repro.core.schedules.KernelTables`:
+``send_start``/``recv_start``/``lo``/``hi`` as dense int32
+``(num_classes, num_rounds, n)`` operands (scalar-prefetch on TPU) and the
+per-class permutations/block heights as kernel *structure* (static python
+loops). ``grid=(num_rounds,)`` walks rounds; the buffer block is revisited
+every step (constant index map + ``input_output_aliases``), which is what
+keeps the whole replay inside one launch.
+
+Two paths, one control flow:
+
+* **Interpret / CPU CI** — the mesh is emulated through a shared
+  ``(n, num_chunks, chunk)`` buffer (``lax.all_gather`` of the per-rank
+  buffers); the kernel replays every rank's sends and merges directly on the
+  shared buffer, then the caller slices its own row. This is the executable
+  contract: parity suites compare it bit-for-bit against
+  ``simulate_lowered`` and the unrolled executor.
+* **TPU** — the same round/class loop issues
+  ``pltpu.make_async_remote_copy`` RDMA per active pair, with a neighbor
+  barrier per class so a sender never overwrites a landing slot its partner
+  has not consumed. Exercised only on real hardware (the repo's CI is CPU);
+  the interpret path above pins the semantics it must reproduce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..core.schedules import KernelTables, LoweredSchedule, pack_tables
+from .ops import on_tpu, resolve_interpret
+
+__all__ = ["inkernel_replay", "inkernel_replay_shared"]
+
+
+@functools.lru_cache(maxsize=256)
+def _packed_planes(tables: KernelTables) -> np.ndarray:
+    """Fold the round tables into the gather/merge planes the emulation
+    kernel consumes: ONE int32 operand of shape
+    ``(num_rounds, num_classes, 2, n, num_chunks)`` where
+
+    * plane 0 (``idx``) — for receiver ``dst`` and row ``r`` of its buffer,
+      the FLAT index (into the shared buffer viewed as ``(n*K, cols)``) of
+      the source row that lands there this round:
+      ``src*K + send_start[src] + clip(r - recv_start[dst], 0, block-1)``
+      (identity ``dst*K + r`` for ranks that never receive in the class);
+    * plane 1 (``mode``) — the KEEP/OVERWRITE/ACCUMULATE selector of
+      ``combine_update._merge_kernel``: ``(1 + combine)`` inside the row
+      window ``[recv_start+lo, recv_start+hi)``, else 0.
+
+    ALL index arithmetic happens here, on the host, at pack time — the
+    tables are static schedule metadata, so the kernel body needs exactly
+    one gather and one where-chain per lane class. That is what keeps the
+    interpret-mode program both tiny and flat: every dynamic-slice the
+    interpreter lowers costs a fixed clamp chain of HLO, so the fewer
+    in-kernel index computations, the smaller the emulated program."""
+    C, T, n = tables.send_start.shape
+    K = tables.num_chunks
+    src_of = np.tile(np.arange(n, dtype=np.int32), (C, 1))
+    active = np.zeros((C, n), np.int32)
+    for c, perm in enumerate(tables.perms):
+        for src, dst in perm:
+            src_of[c, dst] = src
+            active[c, dst] = 1
+    rows = np.arange(K, dtype=np.int32)[None, :]                 # (1, K)
+    planes = np.zeros((T, C, 2, n, K), np.int32)
+    for c in range(C):
+        block = max(tables.blocks[c], 1)
+        for s in range(T):
+            send = tables.send_start[c, s]
+            rel = rows - tables.recv_start[c, s][:, None]        # (n, K)
+            idx = (src_of[c] * K + send[src_of[c]])[:, None] + np.clip(
+                rel, 0, block - 1
+            )
+            ident = np.arange(n, dtype=np.int32)[:, None] * K + rows
+            act = active[c][:, None]
+            planes[s, c, 0] = np.where(act == 1, idx, ident)
+            inwin = (rel >= tables.lo[c, s][:, None]) & (
+                rel < tables.hi[c, s][:, None]
+            )
+            planes[s, c, 1] = inwin * act * (1 + tables.combine[c, s])
+    return np.ascontiguousarray(planes)
+
+
+def _shared_kernel(tables: KernelTables, cols: int,
+                   tab_ref, shared_ref, out_ref):
+    """Replay ALL rounds over the shared (n, K, cols) buffer in one kernel
+    body: a ``lax.fori_loop`` over rounds whose carry is the buffer value,
+    so the whole schedule is one launch and the program size is independent
+    of the round count.
+
+    Classes apply sequentially inside a round (matching
+    ``simulate_lowered``); within a class every source row is read BEFORE
+    any destination write (the class snapshot is the carry value) — a rank
+    can be src of one pair and dst of another in the same class. Per class
+    the body is one precomputed gather (``_packed_planes`` plane 0) pulling
+    every receiver's incoming rows out of the snapshot, then the
+    KEEP/OVERWRITE/ACCUMULATE where-chain of ``combine_update._merge_kernel``
+    under the precomputed mode plane — kept rows round-trip bit-identically.
+    """
+    n, K = tables.n, tables.num_chunks
+    tab = tab_ref[...]
+
+    def round_body(s, out):
+        planes = tab[s]                              # (C, 2, n, K)
+        for c, (perm, block) in enumerate(zip(tables.perms, tables.blocks)):
+            if block == 0 or not perm:
+                continue
+            flat = out.reshape(n * K, cols)
+            rec = flat[planes[c, 0]]                 # (n, K, cols) gather
+            m = planes[c, 1][:, :, None]
+            out = jnp.where(m == 2, out + rec,
+                            jnp.where(m == 1, rec, out))
+        return out
+
+    out_ref[...] = lax.fori_loop(0, tables.num_rounds, round_body,
+                                 shared_ref[...])
+
+
+def inkernel_replay_shared(lowered: LoweredSchedule, shared: jax.Array, *,
+                           interpret: bool | None = None) -> jax.Array:
+    """Replay every round of ``lowered`` on the shared ``(n, K, cols)``
+    buffer in ONE ``pallas_call`` (row r = rank r's local buffer)."""
+    interpret = resolve_interpret(interpret)
+    tables = pack_tables(lowered)
+    T = tables.num_rounds
+    if T == 0 or tables.num_classes == 0:
+        return shared
+    n, K, cols = shared.shape
+    # gridless whole-array launch: the round loop lives INSIDE the kernel
+    # (carry-valued fori_loop), so there is no per-round grid machinery at
+    # all — the packed table plane rides along as the one extra operand
+    return pl.pallas_call(
+        functools.partial(_shared_kernel, tables, cols),
+        out_shape=jax.ShapeDtypeStruct(shared.shape, shared.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(jnp.asarray(_packed_planes(tables)), shared)
+
+
+# ---------------------------------------------------------------------------
+# TPU RDMA path — kernel-initiated transfers (exercised on hardware only)
+# ---------------------------------------------------------------------------
+
+
+def _neighbor_tables(tables: KernelTables):
+    """Per-class partner maps: ``dst_of[c, r]`` is where rank r sends this
+    class (r itself when inactive), ``src_of[c, r]`` who sends to it."""
+    C, n = tables.num_classes, tables.n
+    dst_of = np.tile(np.arange(n, dtype=np.int32), (C, 1))
+    src_of = dst_of.copy()
+    for c, perm in enumerate(tables.perms):
+        for src, dst in perm:
+            dst_of[c, src] = dst
+            src_of[c, dst] = src
+    return dst_of, src_of
+
+
+def _rdma_kernel(tables: KernelTables, axis_name: str, cols: int, *refs):
+    from jax.experimental.pallas import tpu as pltpu
+
+    C = tables.num_classes
+    (send_t, recv_t, lo_t, hi_t, comb_t, dst_of_t, src_of_t,
+     buf_ref, out_ref) = refs[:9]
+    scratch = refs[9:]  # per class: send_scr, recv_scr, send_sem, recv_sem
+
+    s = pl.program_id(0)
+    me = lax.axis_index(axis_name)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = buf_ref[...]
+
+    barrier = pltpu.get_barrier_semaphore()
+    for c in range(C):
+        block = tables.blocks[c]
+        send_scr, recv_scr, send_sem, recv_sem = scratch[4 * c:4 * c + 4]
+        dst = dst_of_t[c, me]
+        src = src_of_t[c, me]
+        is_src = dst != me
+        is_dst = src != me
+
+        # neighbor barrier: both partners must have finished the previous
+        # round's merge before anyone overwrites a landing slot
+        @pl.when(is_src)
+        def _sig_dst():
+            pltpu.semaphore_signal(
+                barrier, device_id=dst,
+                device_id_type=pltpu.DeviceIdType.LOGICAL,
+            )
+
+        @pl.when(is_dst)
+        def _sig_src():
+            pltpu.semaphore_signal(
+                barrier, device_id=src,
+                device_id_type=pltpu.DeviceIdType.LOGICAL,
+            )
+
+        pltpu.semaphore_wait(
+            barrier, is_src.astype(jnp.int32) + is_dst.astype(jnp.int32)
+        )
+
+        @pl.when(is_src)
+        def _send():
+            # stage the outgoing block, then kernel-initiated RDMA to the
+            # partner's landing scratch — no host round-trip, no relaunch
+            send_scr[...] = out_ref[pl.ds(send_t[c, s, me], block), :]
+            rdma = pltpu.make_async_remote_copy(
+                src_ref=send_scr, dst_ref=recv_scr,
+                send_sem=send_sem, recv_sem=recv_sem,
+                device_id=dst, device_id_type=pltpu.DeviceIdType.LOGICAL,
+            )
+            rdma.start()
+            rdma.wait_send()
+
+        @pl.when(is_dst)
+        def _recv():
+            pltpu.semaphore_wait(recv_sem, 1)
+            r0 = recv_t[c, s, me]
+            cur = out_ref[pl.ds(r0, block), :]
+            rec = recv_scr[...]
+            rows = lax.broadcasted_iota(jnp.int32, (block, cols), 0)
+            mode = ((rows >= lo_t[c, s, me]) & (rows < hi_t[c, s, me])
+                    ).astype(jnp.int32) * (1 + comb_t[c, s])
+            out_ref[pl.ds(r0, block), :] = jnp.where(
+                mode == 2, cur + rec, jnp.where(mode == 1, rec, cur)
+            )
+
+
+def _rdma_replay(tables: KernelTables, buf: jax.Array,
+                 axis_name: str) -> jax.Array:
+    from jax.experimental.pallas import tpu as pltpu
+
+    T = tables.num_rounds
+    _K, cols = buf.shape
+    dst_of, src_of = _neighbor_tables(tables)
+    scratch = []
+    for block in tables.blocks:
+        scratch += [
+            pltpu.VMEM((block, cols), buf.dtype),   # send staging
+            pltpu.VMEM((block, cols), buf.dtype),   # landing slot
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ]
+    full = pl.BlockSpec(buf.shape, lambda s: (0,) * buf.ndim)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(T,),
+        in_specs=[full],
+        out_specs=full,
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        functools.partial(_rdma_kernel, tables, axis_name, cols),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+        input_output_aliases={7: 0},
+        compiler_params=pltpu.CompilerParams(
+            has_side_effects=True, collective_id=0
+        ),
+    )(
+        jnp.asarray(tables.send_start), jnp.asarray(tables.recv_start),
+        jnp.asarray(tables.lo), jnp.asarray(tables.hi),
+        jnp.asarray(tables.combine), jnp.asarray(dst_of), jnp.asarray(src_of),
+        buf,
+    )
+
+
+def inkernel_replay(lowered: LoweredSchedule, buf: jax.Array, axis_name: str,
+                    *, interpret: bool | None = None) -> jax.Array:
+    """Replay a lowered schedule on this rank's ``(K, cols)`` buffer with a
+    single kernel launch. Must be called inside ``shard_map`` over
+    ``axis_name``, like the other executors."""
+    interpret = resolve_interpret(interpret)
+    tables = pack_tables(lowered)
+    if tables.num_rounds == 0 or tables.num_classes == 0:
+        return buf
+    if not interpret and on_tpu():
+        return _rdma_replay(tables, buf, axis_name)
+    shared = lax.all_gather(buf, axis_name, axis=0)
+    out = inkernel_replay_shared(lowered, shared, interpret=interpret)
+    return lax.dynamic_index_in_dim(
+        out, lax.axis_index(axis_name), 0, keepdims=False
+    )

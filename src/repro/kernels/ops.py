@@ -16,6 +16,7 @@ from .param_update import mix as _mix, scaled_add as _scaled_add
 
 __all__ = [
     "on_tpu",
+    "resolve_interpret",
     "chunked_copy",
     "fused_combine",
     "mix",
@@ -28,24 +29,31 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Single source of truth for the Pallas ``interpret`` flag.
+
+    ``None`` means "whatever the backend needs": the interpreter off-TPU,
+    real Mosaic lowering on TPU. Every kernel call site must resolve through
+    here — a CPU-backend trace must never embed a literal ``interpret=False``
+    (it would try to Mosaic-lower on a backend that can't).
+    """
+    return (not on_tpu()) if interpret is None else bool(interpret)
+
+
 def chunked_copy(x, *, chunk_elems: int = 64 * 1024, interpret: Optional[bool] = None):
-    interpret = (not on_tpu()) if interpret is None else interpret
-    return _chunked_copy(x, chunk_elems=chunk_elems, interpret=interpret)
+    return _chunked_copy(x, chunk_elems=chunk_elems, interpret=resolve_interpret(interpret))
 
 
 def fused_combine(cur, recv, row_mode, *, interpret: Optional[bool] = None):
-    interpret = (not on_tpu()) if interpret is None else interpret
-    return _fused_combine(cur, recv, row_mode, interpret=interpret)
+    return _fused_combine(cur, recv, row_mode, interpret=resolve_interpret(interpret))
 
 
 def mix(w, u, a, *, interpret: Optional[bool] = None):
-    interpret = (not on_tpu()) if interpret is None else interpret
-    return _mix(w, u, a, interpret=interpret)
+    return _mix(w, u, a, interpret=resolve_interpret(interpret))
 
 
 def scaled_add(w, u, a, *, interpret: Optional[bool] = None):
-    interpret = (not on_tpu()) if interpret is None else interpret
-    return _scaled_add(w, u, a, interpret=interpret)
+    return _scaled_add(w, u, a, interpret=resolve_interpret(interpret))
 
 
 def flash_attention(
@@ -60,7 +68,7 @@ def flash_attention(
     bk: int = 128,
     interpret: Optional[bool] = None,
 ):
-    interpret = (not on_tpu()) if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     return _flash(
         q, k, v, causal=causal, window=window, prefix=prefix, bq=bq, bk=bk, interpret=interpret
     )

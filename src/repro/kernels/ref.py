@@ -5,10 +5,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "chunked_copy_ref",
     "fused_combine_ref",
+    "inkernel_shared_ref",
     "mix_ref",
     "scaled_add_ref",
     "flash_attention_ref",
@@ -23,6 +25,40 @@ def fused_combine_ref(cur, recv, row_mode):
     """Row-mode merge: per row, mode 2 accumulates recv, mode 1 selects it,
     mode 0 passes cur through bit-identically."""
     return jnp.where(row_mode == 2, cur + recv, jnp.where(row_mode == 1, recv, cur))
+
+
+def inkernel_shared_ref(tables, shared):
+    """Numpy oracle for the in-kernel schedule replay over the SHARED
+    ``(n, num_chunks, chunk)`` buffer (row r = rank r's local buffer).
+
+    Identical control flow to ``core.simulator.simulate_lowered``: per round,
+    classes apply sequentially; within a class every source block is
+    snapshotted BEFORE any destination writes (a rank may be src of one pair
+    and dst of another in the same class); a destination whose window is
+    empty (``hi <= lo``) keeps its rows bit-identically. ``tables`` is a
+    :class:`repro.core.schedules.KernelTables`.
+    """
+    out = np.array(shared, copy=True)
+    for s in range(tables.num_rounds):
+        for c in range(tables.num_classes):
+            perm, block = tables.perms[c], tables.blocks[c]
+            if block == 0 or not perm:
+                continue
+            snap = {
+                dst: out[src, tables.send_start[c, s, src]:
+                         tables.send_start[c, s, src] + block].copy()
+                for src, dst in perm
+            }
+            for _src, dst in perm:
+                lo, hi = tables.lo[c, s, dst], tables.hi[c, s, dst]
+                if hi <= lo:
+                    continue
+                r0 = tables.recv_start[c, s, dst]
+                if tables.combine[c, s]:
+                    out[dst, r0 + lo:r0 + hi] += snap[dst][lo:hi]
+                else:
+                    out[dst, r0 + lo:r0 + hi] = snap[dst][lo:hi]
+    return out
 
 
 def mix_ref(w, u, a):

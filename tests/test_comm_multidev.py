@@ -433,6 +433,140 @@ print("PASS")
     )
 
 
+def test_inkernel_executor_parity_all_ops(dist):
+    """ISSUE acceptance (PR 8): the in-kernel executor — ONE persistent
+    Pallas launch replaying the whole lowered schedule — is bit-identical
+    to the unrolled executor for every dense op through the public entry
+    points on 8 ranks."""
+    dist(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comm import (pallgather, pallreduce, pbcast, preduce,
+                        preduce_scatter)
+
+n = 8
+mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.RandomState(9)
+
+def run(fn, xs, out_spec=P("data")):
+    @jax.jit
+    def f(xs):
+        g = lambda b: fn(b[0])[None]
+        return jax.shard_map(g, mesh=mesh, in_specs=(P("data"),),
+                             out_specs=out_spec, check_vma=False)(xs)
+    return np.asarray(f(xs))
+
+def parity(fn, xs, out_spec=P("data")):
+    # inkernel=True forces the single-launch replay; inkernel=False +
+    # compiled=False pins the long-standing unrolled reference
+    ink = run(lambda b: fn(b, inkernel=True), xs, out_spec)
+    unr = run(lambda b: fn(b, inkernel=False, compiled=False), xs, out_spec)
+    np.testing.assert_array_equal(ink, unr)
+    return ink
+
+for elems in (8 * 12, 1013):
+    xs = jnp.asarray(rng.randn(n, elems).astype(np.float32))
+    out = parity(lambda b, **k: pbcast(b, "data", algo="pipelined_chain",
+                                       num_chunks=12, **k), xs)
+    np.testing.assert_array_equal(out[5], np.asarray(xs[0]))
+    parity(lambda b, **k: pbcast(b, "data", algo="bidir_chain",
+                                 num_chunks=12, **k), xs)
+    out = parity(lambda b, **k: preduce(b, "data", root=3,
+                                        algo="pipelined_reduce_chain",
+                                        num_chunks=5, **k), xs)
+    np.testing.assert_allclose(out[3], np.asarray(xs).sum(0),
+                               rtol=2e-5, atol=2e-5)
+    for algo in ("fused_rsb", "ring_allreduce"):
+        kw = {"num_chunks": 12} if algo == "fused_rsb" else {}
+        out = parity(lambda b, a=algo, k=kw, **kk: pallreduce(
+            b, "data", algo=a, **k, **kk), xs)
+        np.testing.assert_allclose(out[0], np.asarray(xs).sum(0),
+                                   rtol=2e-5, atol=2e-5, err_msg=algo)
+    out = parity(lambda b, **k: preduce_scatter(b, "data", **k), xs)
+    shard = -(-elems // n)
+    full = np.concatenate([np.asarray(xs).sum(0),
+                           np.zeros(n * shard - elems, np.float32)])
+    for r in range(n):
+        np.testing.assert_allclose(out[r], full[r*shard:(r+1)*shard],
+                                   rtol=2e-5, atol=2e-5)
+
+sh = jnp.asarray(rng.randn(n, 37).astype(np.float32))
+for algo in ("ring_allgather", "doubling_allgather"):
+    out = parity(lambda b, a=algo, **k: pallgather(b, "data", algo=a, **k)[None][0],
+                 sh, out_spec=P("data", None))
+    for r in range(n):
+        np.testing.assert_array_equal(out[r], np.asarray(sh), err_msg=algo)
+print("PASS")
+""",
+        timeout=580,
+    )
+
+
+def test_inkernel_executor_parity_ragged(dist):
+    """The ragged pair through the in-kernel replay on 4 ranks, including
+    zero-sized ranks: pallgatherv/palltoallv with inkernel=True equal the
+    unrolled reference bit-for-bit and the host-side oracle."""
+    dist(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.comm import palltoallv, pallgatherv
+
+n, E = 4, 3
+mesh = Mesh(np.array(jax.devices()[:n]), ("x",))
+rng = np.random.RandomState(4)
+
+for sizes in [(3, 1, 0, 2), (5, 0, 0, 7)]:
+    smax = max(sizes); total = sum(sizes)
+    full = rng.randn(total, E).astype(np.float32)
+    off = np.concatenate([[0], np.cumsum(sizes)])
+    loc = np.full((n, smax, E), 99.0, np.float32)
+    for r in range(n):
+        loc[r, :sizes[r]] = full[off[r]:off[r + 1]]
+    outs = {}
+    for label, kw in (("ink", dict(inkernel=True)),
+                      ("unr", dict(inkernel=False, compiled=False))):
+        f = shard_map(
+            lambda v, k=kw: pallgatherv(v, "x", sizes=sizes, **k),
+            mesh=mesh, in_specs=P("x"), out_specs=P(), check_rep=False)
+        outs[label] = np.asarray(f(jnp.asarray(loc.reshape(n * smax, E))))
+    assert np.array_equal(outs["ink"], outs["unr"]), sizes
+    assert np.array_equal(outs["ink"], full), sizes
+
+m = np.array([[2, 0, 1, 3], [0, 0, 0, 0], [1, 4, 0, 0], [2, 2, 2, 2]], np.int64)
+send = m.sum(axis=1); recv = m.sum(axis=0)
+smax = max(int(send.max()), 1); rmax = max(int(recv.max()), 1)
+blocks = {(s, d): rng.randn(int(m[s, d]), E).astype(np.float32)
+          for s in range(n) for d in range(n)}
+xin = np.full((n, smax, E), 88.0, np.float32)
+for s in range(n):
+    xin[s, :send[s]] = np.concatenate(
+        [blocks[(s, d)] for d in range(n)] + [np.zeros((0, E), np.float32)])
+exp = np.zeros((n, rmax, E), np.float32)
+for r in range(n):
+    exp[r, :recv[r]] = np.concatenate(
+        [blocks[(s, r)] for s in range(n)] + [np.zeros((0, E), np.float32)])
+for algo in ("pairwise_alltoallv", "ring_alltoallv"):
+    outs = {}
+    for label, kw in (("ink", dict(inkernel=True)),
+                      ("unr", dict(inkernel=False, compiled=False))):
+        f = shard_map(
+            lambda v, a=algo, k=kw: palltoallv(v, "x", sizes=m.tolist(),
+                                               algo=a, **k),
+            mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_rep=False)
+        outs[label] = np.asarray(
+            f(jnp.asarray(xin.reshape(n * smax, E)))).reshape(n, rmax, E)
+    assert np.array_equal(outs["ink"], outs["unr"]), algo
+    assert np.array_equal(outs["ink"], exp), algo
+print("PASS")
+""",
+        devices=4,
+        timeout=580,
+    )
+
+
 def test_trainer_tuned_allreduce_matches_psum_baseline(dist):
     """ISSUE acceptance: sync_mode='tuned_allreduce' produces params
     allclose to the GSPMD/psum baseline on a multi-device mesh (identical

@@ -99,6 +99,85 @@ def test_tuner_empirical_override(tmp_path):
     assert t2.select(M, n).algo == "chain"
 
 
+# ------------------- executor-path pricing (PR 8) ---------------------------
+
+
+def test_t_exec_path_ordering():
+    """For any multi-round schedule the single persistent launch is priced
+    strictly below the per-round compiled loop, which is strictly below the
+    fully unrolled program."""
+    for rounds, classes in [(3, 1), (10, 2), (29, 2)]:
+        ink = cm.t_exec_path("inkernel", rounds, classes, HW)
+        comp = cm.t_exec_path("compiled", rounds, classes, HW)
+        unr = cm.t_exec_path("unrolled", rounds, classes, HW)
+        assert 0 < ink < comp <= unr
+        if classes > 1:
+            assert comp < unr
+    # a 0-round noop costs at most one boundary on any path
+    assert cm.t_exec_path("compiled", 0, 1, HW) == 0.0
+    with pytest.raises(ValueError):
+        cm.t_exec_path("warp_specialized", 4, 1, HW)
+
+
+def test_calibrate_t_launch_from_committed_table():
+    """The committed compile table must calibrate to a positive per-round
+    lowering cost, and the per-n-group medians must agree within ~2x —
+    boundary cost is a property of the toolchain, not the rank count."""
+    import os
+
+    from repro.comm.tables import load_compile_table
+
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "experiments", "compile_table.json")
+    table = load_compile_table(path)
+    t = cm.calibrate_t_launch(table)
+    assert t > 0
+    per_n = {}
+    for key in table:
+        n_group = key.split("/")[0]
+        per_n.setdefault(n_group, {})[key] = table[key]
+    medians = {g: cm.calibrate_t_launch(sub) for g, sub in per_n.items()
+               if len({k.rsplit("/K", 1)[0] for k in sub}) >= 1}
+    vals = [v for v in medians.values() if v > 0]
+    assert len(vals) >= 2, f"need >=2 n-groups with multi-K sweeps, got {medians}"
+    assert max(vals) <= 2.0 * min(vals), medians
+
+
+def test_calibrate_t_launch_rejects_flat_table():
+    with pytest.raises(ValueError):
+        cm.calibrate_t_launch(
+            {"n8/bcast/chain/K4": {"num_rounds": 4, "unrolled_lower_s": 0.1}}
+        )
+
+
+def test_tuner_exec_path_roundtrip(tmp_path):
+    """record(exec_path=...) -> select() surfaces it; persistence keeps it;
+    load() rejects a rotted value."""
+    import json
+
+    t = Tuner()
+    M, n = 1 << 20, 8
+    t.record(M, n, "pipelined_chain", 8, measured_s=1e-9, exec_path="inkernel")
+    hit = t.select(M, n)
+    assert hit.source == "empirical" and hit.exec_path == "inkernel"
+    p = str(tmp_path / "table.json")
+    t.save(p)
+    assert Tuner.load(p).select(M, n).exec_path == "inkernel"
+    with pytest.raises(ValueError):
+        # a winning measurement with a bogus tier must be rejected, not stored
+        t.record(M, n, "chain", 1, measured_s=1e-12, exec_path="warp_specialized")
+    from repro.core.tuner import TunerTableError
+
+    blob = json.load(open(p))
+    for entry in blob["table"].values():
+        if "exec_path" in entry:
+            entry["exec_path"] = "warp_specialized"
+    bad = str(tmp_path / "bad.json")
+    json.dump(blob, open(bad, "w"))
+    with pytest.raises(TunerTableError):
+        Tuner.load(bad)
+
+
 def test_tuner_calibrate_picks_best():
     t = Tuner()
     costs = {"binomial": 3.0, "chain": 1.0, "pipelined_chain": 2.0, "knomial": 4.0,

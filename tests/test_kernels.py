@@ -147,3 +147,96 @@ def test_chunked_copy_never_materializes_pad():
         lambda v: chunked_copy(v, chunk_elems=256, interpret=True))(x))
     assert "concatenate" not in jaxpr
     assert "pad" not in jaxpr
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode resolution: one helper, every call site
+
+
+def _pallas_eqns(jaxpr):
+    """Yield every pallas_call eqn, recursing through sub-jaxpr params."""
+    import jax.core as jc
+
+    def subs(v):
+        if isinstance(v, jc.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jc.Jaxpr):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for x in v:
+                yield from subs(x)
+
+    for eq in jaxpr.eqns:
+        if eq.primitive.name == "pallas_call":
+            yield eq
+        for v in eq.params.values():
+            for sub in subs(v):
+                yield from _pallas_eqns(sub)
+
+
+def test_resolve_interpret_tiers():
+    """None defers to the backend probe; explicit bools always win."""
+    from repro.kernels.ops import on_tpu, resolve_interpret
+
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # in the CPU CI environment the default must interpret; on real TPU
+    # hardware the same None must compile
+    assert resolve_interpret(None) is (not on_tpu())
+
+
+def test_cpu_traces_never_embed_compiled_pallas():
+    """Satellite regression: with interpret left to default on a CPU
+    backend, NO pallas_call in any kernel entry point's jaxpr may carry
+    interpret=False — that trace would abort at compile time."""
+    import jax
+    from repro.kernels.ops import on_tpu
+
+    if on_tpu():
+        pytest.skip("CPU-backend regression; interpret defaults off on TPU")
+
+    x = jnp.zeros(1000, jnp.float32)
+    w = jnp.zeros(128, jnp.float32)
+    q = jnp.zeros((1, 64, 2, 16), jnp.float32)
+    kv = jnp.zeros((1, 64, 1, 16), jnp.float32)
+    mode = jnp.zeros((4, 1), jnp.int32)
+    cases = [
+        (lambda: ops.chunked_copy(x, chunk_elems=256), "chunked_copy"),
+        (lambda: ops.mix(w, w, 0.5), "mix"),
+        (lambda: ops.scaled_add(w, w, 0.1), "scaled_add"),
+        (lambda: ops.fused_combine(jnp.zeros((4, 8)), jnp.ones((4, 8)), mode),
+         "fused_combine"),
+        (lambda: ops.flash_attention(q, kv, kv, causal=True, bq=32, bk=32),
+         "flash_attention"),
+    ]
+    found = 0
+    for fn, name in cases:
+        jx = jax.make_jaxpr(lambda _=None: fn())()
+        eqns = list(_pallas_eqns(jx.jaxpr))
+        assert eqns, f"{name}: no pallas_call found in trace"
+        for eq in eqns:
+            assert eq.params["interpret"] is not False, (
+                f"{name}: CPU trace embeds interpret=False"
+            )
+        found += len(eqns)
+    assert found >= len(cases)
+
+
+def test_inkernel_replay_honors_resolve_interpret():
+    """The in-kernel executor's emulation kernel goes through the same
+    resolver: its single pallas_call interprets on CPU."""
+    import jax
+    from repro.core.schedules import build, lower_schedule
+    from repro.kernels.inkernel_collective import inkernel_replay_shared
+    from repro.kernels.ops import on_tpu
+
+    if on_tpu():
+        pytest.skip("CPU-backend regression; interpret defaults off on TPU")
+
+    n, K = 4, 4
+    low = lower_schedule(build("pipelined_chain", n, root=0, num_chunks=K))
+    shared = jnp.zeros((n, K, 8), jnp.float32)
+    jx = jax.make_jaxpr(lambda s: inkernel_replay_shared(low, s))(shared)
+    eqns = list(_pallas_eqns(jx.jaxpr))
+    assert len(eqns) == 1, "replay must stay a single launch"
+    assert eqns[0].params["interpret"] is not False

@@ -201,8 +201,11 @@ def test_fallback_chain_degrades_to_one_shot(monkeypatch):
     plan = plan_collective("allreduce", 1 << 12, 4, algo="ring_allreduce")
     calls = []
 
-    def broken_apply(plan, x, axis_name, *, fused=True, compiled=None):
-        calls.append("compiled" if compiled else "unrolled")
+    def broken_apply(plan, x, axis_name, *, fused=True, compiled=None,
+                     inkernel=None):
+        calls.append(
+            "inkernel" if inkernel else ("compiled" if compiled else "unrolled")
+        )
         raise RuntimeError("executor exploded")
 
     monkeypatch.setattr(comm_api, "apply_plan", broken_apply)
@@ -215,9 +218,36 @@ def test_fallback_chain_degrades_to_one_shot(monkeypatch):
     )
     assert out == "one-shot-result"
     # each schedule stage burned its retry before the chain degraded
-    assert calls == ["compiled", "compiled", "unrolled", "unrolled"]
-    assert [e.outcome for e in events] == ["error"] * 4 + ["ok"]
+    assert calls == ["inkernel", "inkernel", "compiled", "compiled",
+                     "unrolled", "unrolled"]
+    assert [e.outcome for e in events] == ["error"] * 6 + ["ok"]
     assert events[-1].stage == "xla"
+
+
+def test_inkernel_failure_degrades_to_compiled(monkeypatch):
+    """The new chain head: an in-kernel failure falls back to the compiled
+    executor and the run SUCCEEDS there — straggler events on the recovery
+    stage are still recorded on the way."""
+    plan = plan_collective("allreduce", 1 << 12, 4, algo="ring_allreduce")
+
+    def apply(plan, x, axis_name, *, fused=True, compiled=None, inkernel=None):
+        if inkernel:
+            raise RuntimeError("no in-kernel dma engine")
+        import time
+        time.sleep(0.02)
+        return "compiled-result"
+
+    monkeypatch.setattr(comm_api, "apply_plan", apply)
+    events = []
+    out = comm_api.apply_plan_resilient(
+        plan, None, "data",
+        policy=_fast_policy(max_retries=0, timeout_s=1e-4),
+        on_event=events.append,
+    )
+    assert out == "compiled-result"
+    assert [(e.stage, e.outcome) for e in events] == [
+        ("inkernel", "error"), ("compiled", "straggler"),
+    ]
 
 
 def test_fallback_exhausted_names_every_cause(monkeypatch):
@@ -233,7 +263,7 @@ def test_fallback_exhausted_names_every_cause(monkeypatch):
             plan, None, "data", policy=_fast_policy(max_retries=0)
         )
     msg = str(ei.value)
-    for stage in ("compiled[0]", "unrolled[0]", "xla[0]"):
+    for stage in ("inkernel[0]", "compiled[0]", "unrolled[0]", "xla[0]"):
         assert stage in msg
     assert "no fabric" in msg
 

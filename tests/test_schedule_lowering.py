@@ -224,3 +224,176 @@ def test_compile_table_loader_rejects_rot(tmp_path):
     grown["n8/bcast/pipelined_chain/K16"] = e2
     with pytest.raises(TableSchemaError):
         check_compile_flatness(grown)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel executor: single-launch replay parity + artifact gate
+# ---------------------------------------------------------------------------
+
+
+def _shared_from(data):
+    return np.stack([np.asarray(d, np.float32) for d in data])
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 6, 8])
+@pytest.mark.parametrize("K", [1, 4, 7])
+def test_inkernel_replay_matches_simulator(n, K):
+    """The persistent single-launch kernel (interpret-mode emulation), its
+    numpy oracle, and the lowered simulator agree bit-for-bit on the shared
+    buffer — every algo, pow2 and non-pow2 n, divisible and awkward chunk
+    counts."""
+    import jax.numpy as jnp
+
+    from repro.core.schedules import pack_tables
+    from repro.kernels.inkernel_collective import inkernel_replay_shared
+    from repro.kernels.ref import inkernel_shared_ref
+
+    for sched in _schedules(n, K):
+        low = lower_schedule(sched)
+        data = [RNG.randn(sched.num_chunks, 3).astype(np.float32) for _ in range(n)]
+        want = simulate_lowered(low, data)
+        oracle = inkernel_shared_ref(pack_tables(low), _shared_from(data))
+        got = np.asarray(inkernel_replay_shared(low, jnp.asarray(_shared_from(data))))
+        for r in range(n):
+            assert np.array_equal(want[r], oracle[r]), (sched.name, n, K, r)
+            assert np.array_equal(want[r], got[r]), (sched.name, n, K, r)
+
+
+@pytest.mark.parametrize(
+    "op,algo,sizes",
+    [
+        ("allgatherv", "ring_allgatherv", (3, 0, 2, 0)),
+        ("allgatherv", "doubling_allgatherv", (0, 4, 1, 2)),
+        ("alltoallv", "pairwise_alltoallv",
+         (0, 1, 2, 0, 3, 0, 0, 1, 1, 0, 0, 2, 2, 1, 0, 0)),
+        ("alltoallv", "ring_alltoallv",
+         (1, 0, 0, 2, 0, 0, 1, 0, 2, 1, 0, 0, 0, 0, 3, 1)),
+    ],
+)
+def test_inkernel_replay_matches_simulator_ragged(op, algo, sizes):
+    """Ragged parity including zero-sized ranks: the in-kernel replay of the
+    allgatherv/alltoallv schedules is bit-identical to the simulator."""
+    import jax.numpy as jnp
+
+    from repro.core.schedules import pack_tables
+    from repro.kernels.inkernel_collective import inkernel_replay_shared
+    from repro.kernels.ref import inkernel_shared_ref
+
+    n = 4
+    sched = build_op(op, algo, n, 0, sizes=sizes)
+    low = lower_schedule(sched)
+    data = [RNG.randn(sched.num_chunks, 2).astype(np.float32) for _ in range(n)]
+    want = simulate_lowered(low, data)
+    oracle = inkernel_shared_ref(pack_tables(low), _shared_from(data))
+    got = np.asarray(inkernel_replay_shared(low, jnp.asarray(_shared_from(data))))
+    for r in range(n):
+        assert np.array_equal(want[r], oracle[r]), (op, algo, r)
+        assert np.array_equal(want[r], got[r]), (op, algo, r)
+
+
+def test_inkernel_single_launch_and_flat_jaxpr():
+    """ISSUE acceptance, structural half: ONE pallas_call per schedule replay
+    and a traced program whose size is independent of both chunk count and
+    round count."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.inkernel_collective import inkernel_replay_shared
+
+    def count_pallas(jaxpr):
+        import jax.core as jc
+
+        def subs(v):
+            if isinstance(v, jc.ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, jc.Jaxpr):
+                yield v
+            elif isinstance(v, (list, tuple)):
+                for x in v:
+                    yield from subs(x)
+
+        total = 0
+        for eq in jaxpr.eqns:
+            if eq.primitive.name == "pallas_call":
+                total += 1
+            for v in eq.params.values():
+                for sub in subs(v):
+                    total += count_pallas(sub)
+        return total
+
+    sizes = {}
+    for K in (4, 16, 64):
+        low = lower_schedule(build("pipelined_chain", 4, 0, num_chunks=K))
+        shared = jnp.zeros((4, K, 8), jnp.float32)
+        closed = jax.make_jaxpr(
+            lambda s, low=low: inkernel_replay_shared(low, s)
+        )(shared)
+        assert count_pallas(closed.jaxpr) == 1, K
+        sizes[K] = len(closed.jaxpr.eqns)
+    assert len(set(sizes.values())) == 1, sizes
+
+
+def test_committed_inkernel_table_passes_gate():
+    """ISSUE acceptance, artifact half: the committed table shows exactly one
+    launch per replay, HLO flat in K and strictly below the compiled
+    executor's at each group's deepest point — all enforced by the loader."""
+    from repro.comm.tables import load_inkernel_table
+
+    table = load_inkernel_table(
+        os.path.join(REPO, "experiments", "inkernel_table.json")
+    )
+    assert all(e["inkernel_launches"] == 1 for e in table.values())
+    multi_k = {}
+    for key in table:
+        n, op, algo, _K = key.split("/")
+        multi_k[(n, op, algo)] = multi_k.get((n, op, algo), 0) + 1
+    assert sum(1 for v in multi_k.values() if v >= 2) >= 2
+
+
+def test_inkernel_table_loader_rejects_rot(tmp_path):
+    import json
+
+    from repro.comm.tables import load_inkernel_table
+
+    good = {
+        "n4/bcast/pipelined_chain/K4": {
+            "inkernel_launches": 1, "inkernel_hlo": 170, "compiled_hlo": 210,
+            "num_rounds": 6, "compiled_rounds": 6, "round_us": 50.0,
+        },
+        "n4/bcast/pipelined_chain/K16": {
+            "inkernel_launches": 1, "inkernel_hlo": 172, "compiled_hlo": 211,
+            "num_rounds": 18, "compiled_rounds": 18, "round_us": 20.0,
+        },
+    }
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps(good))
+    assert load_inkernel_table(str(p))
+
+    def k16(t):
+        return t["n4/bcast/pipelined_chain/K16"]
+
+    for mutate in (
+        # a second launch: the whole point of the executor regressed
+        lambda t: k16(t).__setitem__("inkernel_launches", 2),
+        # executor round-count drift
+        lambda t: k16(t).__setitem__("compiled_rounds", 19),
+        # HLO no longer flat in K
+        lambda t: k16(t).__setitem__("inkernel_hlo", 400),
+        # not smaller than the compiled program at the deepest K
+        lambda t: k16(t).__setitem__("inkernel_hlo", 211),
+        lambda t: t.__setitem__("bogus-key", dict(k16(t))),
+        lambda t: k16(t).__setitem__("round_us", float("nan")),
+        lambda t: k16(t).pop("num_rounds"),
+        lambda t: k16(t).__setitem__("surprise", 1),
+    ):
+        bad = json.loads(json.dumps(good))
+        mutate(bad)
+        p.write_text(json.dumps(bad))
+        with pytest.raises(TableSchemaError):
+            load_inkernel_table(str(p))
+
+    # a table with no multi-K sweep at all is not a gateable artifact
+    single = {"n4/bcast/pipelined_chain/K4": good["n4/bcast/pipelined_chain/K4"]}
+    p.write_text(json.dumps(single))
+    with pytest.raises(TableSchemaError):
+        load_inkernel_table(str(p))
