@@ -1,11 +1,18 @@
 """Fig. 2 analogue — inter-pod (64/128 rank) broadcast: hierarchical tuned
-bcast vs flat one-shot. Measured on a (2, 4) pod x data mesh on host devices;
-TPU-v5e predictions use the two-level cost model with inter-pod link pricing."""
+bcast vs flat one-shot, driven through the ``repro.comm`` plan layer.
+
+Measured on a (2, 4) pod x data mesh on host devices via ``comm.pbcast``
+(the plan-layer entry point — per-level ``CollectivePlan``s resolved through
+``plan_cached``, inter-pod level priced with the tuner's inter-pod
+constants); TPU-v5e predictions use the two-level cost model. Wire-byte
+accounting is planned-vs-measured: the worker reports the wire bytes of the
+plans it actually executed, and this process re-plans the same points and
+asserts the numbers agree — the accounting the streams table leans on."""
 from __future__ import annotations
 
 import json
-import math
 
+from repro.comm.plan import plan_cached
 from repro.core import cost_model as cm
 from repro.core.tuner import Tuner
 
@@ -13,6 +20,7 @@ from .common import run_worker
 
 SIZES = [4 << 10, 256 << 10, 4 << 20, 64 << 20]
 RANKS = [64, 128]
+MEASURED_MESH = (2, 4)  # (pod, data) host-device worker mesh
 
 
 def _model_hierarchical(M: int, n_pods: int, per_pod: int, tuner: Tuner) -> float:
@@ -25,17 +33,31 @@ def _model_hierarchical(M: int, n_pods: int, per_pod: int, tuner: Tuner) -> floa
     return t_inter + t_intra
 
 
+def _planned_wire_bytes(M: int, n_pods: int, per_pod: int, tuner: Tuner) -> int:
+    """Host-side plan-layer accounting for one hierarchical bcast: the
+    inter-pod leader level plus the intra-pod fanout, each through the
+    SAME ``plan_cached`` path the worker executes."""
+    total = 0
+    if n_pods > 1:
+        total += plan_cached("bcast", M, n_pods, tuner=tuner,
+                             inter_pod=True).wire_bytes()
+    total += plan_cached("bcast", M, per_pod, tuner=tuner).wire_bytes()
+    return total
+
+
 def rows(quick: bool = False, dryrun: bool = False):
     tuner = Tuner()
     out = []
-    # measured: (pod=2, data=4) mesh on 8 host devices
+    # measured: (pod=2, data=4) mesh on 8 host devices, broadcast through
+    # the plan layer (comm.pbcast) — per-level plans, inter-pod level first
     worker = """
 import time, json
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.core import hierarchical_bcast, pbcast
+from repro.comm import pbcast
+from repro.comm.plan import plan_cached
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh(%r, ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
 
 def measure(M, algo, reps=5):
     elems = max(M // 4, 1)
@@ -44,7 +66,8 @@ def measure(M, algo, reps=5):
     def run(xs):
         def f(b):
             if algo == "hier":
-                out = hierarchical_bcast(b[0, 0], ("pod", "data"), root=0)
+                out = pbcast(b[0, 0], "pod", root=0, inter_pod=True)
+                out = pbcast(out, "data", root=0)
             else:
                 out = pbcast(pbcast(b[0, 0], "pod", algo=algo), "data", algo=algo)
             return out[None, None]
@@ -57,12 +80,27 @@ def measure(M, algo, reps=5):
 
 res = {}
 for M in %s:
-    res[str(M)] = {"hier": measure(M, "hier"), "xla_psum": measure(M, "xla_psum")}
+    wire = plan_cached("bcast", M, 2, inter_pod=True).wire_bytes() \\
+        + plan_cached("bcast", M, 4).wire_bytes()
+    res[str(M)] = {"hier": measure(M, "hier"), "xla_psum": measure(M, "xla_psum"),
+                   "wire_bytes": wire}
 print(json.dumps(res))
-""" % (SIZES[:2] if quick else SIZES[:3])
+""" % (MEASURED_MESH, SIZES[:2] if quick else SIZES[:3])
     # dryrun: skip the device worker; the measured columns fall back to 0
     # and the analytic two-level model carries the row (CI smoke)
     measured = {} if dryrun else run_worker(worker, devices=8)
+
+    # planned-vs-measured wire bytes: the worker's executed plans must
+    # account exactly the bytes this process plans for the same points
+    for M_str, m in measured.items():
+        M = int(M_str)
+        planned = _planned_wire_bytes(M, MEASURED_MESH[0],
+                                      MEASURED_MESH[1], tuner)
+        if planned != m["wire_bytes"]:
+            raise AssertionError(
+                f"wire-byte accounting drifted at M={M}: planned {planned} "
+                f"vs worker-executed {m['wire_bytes']}"
+            )
 
     for n in RANKS:
         n_pods = 2 if n > 64 else 1
@@ -79,6 +117,10 @@ print(json.dumps(res))
                     "us_per_call": (m.get("hier", 0.0)) * 1e6,
                     "derived": {
                         "measured_xla_psum_us": m.get("xla_psum", 0.0) * 1e6,
+                        "measured_wire_bytes": m.get("wire_bytes", 0),
+                        "planned_wire_bytes": _planned_wire_bytes(
+                            M, n_pods, per_pod, tuner
+                        ),
                         "tpu_model_hier_us": t_hier * 1e6,
                         "tpu_model_flat_us": t_flat * 1e6,
                         "model_speedup": t_flat / max(t_hier, 1e-12),

@@ -1,0 +1,288 @@
+"""Multi-stream link-scheduler benchmark — arbitrated vs naive serialization.
+
+For each contention scenario this suite plans a :class:`~repro.comm.StreamGraph`
+(the SAME ``plan_streams`` path the trainer's prefetch stream and the serve
+engine's distribution graph resolve through), replays it in the round-accurate
+contention simulator (``comm.simulate_streams``), and records the arbitrated
+span against naive serialization of the same entries — plus the two scheduler
+properties (fairness within the graph's bound, no idle-while-ready rounds) in
+checkable form. Rows land in the schema-gated
+``experiments/streams_table.json`` (``comm.tables.load_streams_table``), whose
+loader RE-CHECKS multi <= naive, requires a strict win for independently
+contending streams at n >= 4, and rebuilds every 1-stream entry through the
+PR 4 overlap engine round-for-round (the backward-compat contract).
+
+Scenarios:
+
+* ``sync_prefetch`` — the trainer's steady state: gradient sync (allreduce,
+  priority 1, backward dispatch order, hidden-compute gaps) contends with the
+  previous step's weight prefetch (bcast, priority 0) for the same ICI link.
+  The entries are independent — in the pipelined regime the prefetch of step
+  t-1 overlaps the grad sync of step t — so the arbiter fills sync's
+  compute-gated link gaps with prefetch buckets: the strict-win witness.
+* ``distribute_drain`` — the serve engine's start-up: checkpoint drain on the
+  host link concurrent with tuned weight distribution on ICI. Different
+  links never contend, so arbitration runs them concurrently while naive
+  serialization chains them — the cross-link strict win.
+* ``overlap_<mix>`` — 1-stream parity rows at the overlap-bench bucket
+  mixes: the loader rebuilds each through ``plan_overlap``/``simulate_overlap``
+  and requires identical round counts (a drifted refactor fails the gate).
+
+``dryrun=True`` brands the table (simulator numbers only); the non-dryrun
+mode additionally measures interleaved vs sequential execution of the
+``sync_prefetch`` graph on simulated host devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+import jax
+
+from repro.comm.streams import (
+    StreamGraph,
+    StreamSpec,
+    plan_streams,
+    simulate_streams,
+)
+from repro.comm.tables import load_streams_table
+from repro.core.tuner import Tuner
+
+from .common import run_worker
+
+RANKS = [4, 8]
+BUCKET_BYTES = 64 << 10
+# the overlap-bench bucket mixes (paper Sec. V-D spectrum) — reused so the
+# 1-stream parity rows cover the same points the overlap table does
+MIXES = [
+    ("uniform8", [4096] * 8),
+    ("mixed", [65536, 65536, 4096, 4096, 512, 512, 64, 64]),
+    ("two_big", [262144, 262144]),
+]
+GRAD_LEAVES = MIXES[1][1]
+WEIGHT_LEAVES = [32768, 32768, 8192, 8192, 1024, 1024]
+SYNC_COMPUTE_S = 1e-3
+
+MEASURE_STREAMS = """
+import time, json
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comm.streams import StreamSpec, plan_streams, execute_streams, execute_stream_entry
+from repro.core.tuner import Tuner
+
+def measure(n, gleaves, pleaves, interleaved, reps=5):
+    mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    trees = {
+        "grad_sync": {f"g{i}": jnp.asarray(rng.randn(n, e).astype(np.float32))
+                      for i, e in enumerate(gleaves)},
+        "weight_prefetch": {f"w{i}": jnp.asarray(rng.randn(n, e).astype(np.float32))
+                            for i, e in enumerate(pleaves)},
+    }
+    graph = plan_streams([
+        StreamSpec(name="grad_sync",
+                   tree=jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                                     trees["grad_sync"]),
+                   axes=(("data", n),), op="allreduce", priority=1,
+                   compute_s=%r, bucket_bytes=%d, reverse=True),
+        StreamSpec(name="weight_prefetch",
+                   tree=jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                                     trees["weight_prefetch"]),
+                   axes=(("data", n),), op="bcast", priority=0,
+                   bucket_bytes=%d, reverse=False),
+    ], tuner=Tuner())
+    specs = jax.tree.map(lambda _: P("data"), trees)
+    def g(t):
+        sub = jax.tree.map(lambda x: x[0], t)
+        if interleaved:
+            out = execute_streams(graph, sub)
+        else:
+            out = {name: execute_stream_entry(graph.entry(name), tree)
+                   for name, tree in sub.items()}
+        return jax.tree.map(lambda x: x[None], out)
+    f = jax.jit(lambda t: jax.shard_map(g, mesh=mesh, in_specs=(specs,),
+                                        out_specs=specs, check_vma=False)(t))
+    jax.block_until_ready(f(trees))   # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter(); jax.block_until_ready(f(trees))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+""" % (SYNC_COMPUTE_S, BUCKET_BYTES, BUCKET_BYTES)
+
+
+def _tree(leaves):
+    return {
+        f"l{i}": jax.ShapeDtypeStruct((e,), np.float32)
+        for i, e in enumerate(leaves)
+    }
+
+
+def _graph_sync_prefetch(n: int, tuner: Tuner) -> tuple[StreamGraph, dict]:
+    graph = plan_streams(
+        [
+            StreamSpec(
+                name="grad_sync", tree=_tree(GRAD_LEAVES), axes=(("data", n),),
+                op="allreduce", priority=1, compute_s=SYNC_COMPUTE_S,
+                bucket_bytes=BUCKET_BYTES, reverse=True,
+            ),
+            StreamSpec(
+                name="weight_prefetch", tree=_tree(GRAD_LEAVES),
+                axes=(("data", n),), op="bcast", priority=0,
+                bucket_bytes=BUCKET_BYTES, reverse=False,
+            ),
+        ],
+        tuner=tuner,
+    )
+    meta = {
+        "grad_sync": {"leaves": GRAD_LEAVES, "compute_s": SYNC_COMPUTE_S,
+                      "reverse": True},
+        "weight_prefetch": {"leaves": GRAD_LEAVES, "compute_s": 0.0,
+                            "reverse": False},
+    }
+    return graph, meta
+
+
+def _graph_distribute_drain(n: int, tuner: Tuner) -> tuple[StreamGraph, dict]:
+    g = plan_streams(
+        [
+            StreamSpec(
+                name="distribute", tree=_tree(WEIGHT_LEAVES),
+                axes=(("data", n),), op="bcast", priority=1, overlap_depth=2,
+                bucket_bytes=BUCKET_BYTES, reverse=False,
+            ),
+        ],
+        tuner=tuner,
+    )
+    dist = g.entries[0]
+    # the host-link snapshot stream the engine's drain_dir path carries:
+    # same bucket mix, no collective plans, one round per bucket on 'host'
+    drain = dataclasses.replace(
+        dist, name="ckpt_drain", op="drain", axes=(), plans={},
+        overlap_depth=1, priority=2, link="host",
+    )
+    graph = StreamGraph((drain, dist), key=g.key)
+    meta = {
+        "ckpt_drain": {"leaves": WEIGHT_LEAVES, "compute_s": 0.0,
+                       "reverse": False},
+        "distribute": {"leaves": WEIGHT_LEAVES, "compute_s": 0.0,
+                       "reverse": False},
+    }
+    return graph, meta
+
+
+def _graph_single(n: int, leaves, tuner: Tuner) -> tuple[StreamGraph, dict]:
+    graph = plan_streams(
+        [
+            StreamSpec(
+                name="overlap", tree=_tree(leaves), axes=(("data", n),),
+                op="allreduce", priority=0, compute_s=SYNC_COMPUTE_S,
+                bucket_bytes=BUCKET_BYTES, reverse=True,
+            ),
+        ],
+        tuner=tuner,
+    )
+    meta = {"overlap": {"leaves": leaves, "compute_s": SYNC_COMPUTE_S,
+                        "reverse": True}}
+    return graph, meta
+
+
+def _entry_for_table(graph: StreamGraph, sim: dict, meta: dict,
+                     dryrun: bool) -> dict:
+    rows = []
+    for e in graph.entries:
+        s = sim["streams"][e.name]
+        m = meta[e.name]
+        rows.append({
+            "name": e.name,
+            "op": e.op,
+            "algo": "auto",
+            "priority": e.priority,
+            "depth": e.overlap_depth,
+            "depth_source": e.depth_source,
+            "link": e.link,
+            "after": list(e.after),
+            "comm_rounds": s["comm_rounds"],
+            "stage_rounds": s["stage_rounds"],
+            "finish_round": s["finish_round"],
+            "naive_finish_round": s["naive_finish_round"],
+            "wait_rounds": s["wait_rounds"],
+            "idle_rounds": s["idle_rounds"],
+            "wire_bytes": s["wire_bytes"],
+            "leaves": list(m["leaves"]),
+            "bucket_bytes": BUCKET_BYTES,
+            "compute_s": m["compute_s"],
+            "reverse": bool(m["reverse"]),
+        })
+    entry = {
+        "streams": rows,
+        "starvation_bound": sim["starvation_bound"],
+        "fairness_bound": sim["fairness_bound"],
+        "multi_span_rounds": sim["multi_span_rounds"],
+        "naive_span_rounds": sim["naive_span_rounds"],
+        "max_skips": sim["max_skips"],
+        "idle_while_ready_rounds": sim["idle_while_ready_rounds"],
+        "mean_round_us": sim["mean_round_s"] * 1e6,
+        "wire_bytes": sim["wire_bytes"],
+    }
+    if dryrun:
+        entry["dryrun"] = True
+    return entry
+
+
+def rows(quick: bool = False, dryrun: bool = False):
+    ranks = RANKS[:1] if quick else RANKS
+    mixes = MIXES[:2] if quick else MIXES
+    scenarios = []
+    for n in ranks:
+        scenarios.append((f"sync_prefetch/n{n}", *_graph_sync_prefetch(n, Tuner())))
+        scenarios.append((f"distribute_drain/n{n}",
+                          *_graph_distribute_drain(n, Tuner())))
+        for mix_name, leaves in mixes:
+            scenarios.append((f"overlap_{mix_name}/n{n}",
+                              *_graph_single(n, leaves, Tuner())))
+    table = {}
+    out = []
+    for key, graph, meta in scenarios:
+        sim = simulate_streams(graph)
+        table[key] = _entry_for_table(graph, sim, meta, dryrun)
+        derived = {
+            "num_streams": sim["num_streams"],
+            "naive_span_rounds": sim["naive_span_rounds"],
+            "span_speedup": sim["naive_span_rounds"]
+            / max(sim["multi_span_rounds"], 1),
+            "max_skips": sim["max_skips"],
+            "fairness_bound": sim["fairness_bound"],
+            "idle_while_ready_rounds": sim["idle_while_ready_rounds"],
+            "wire_bytes": sim["wire_bytes"],
+            "links": sim["links"],
+            "fingerprint": graph.fingerprint(),
+        }
+        if not dryrun and key.startswith("sync_prefetch/"):
+            n = int(key.rsplit("/n", 1)[1])
+            worker = MEASURE_STREAMS + f"""
+res = {{"interleaved": measure({n}, {GRAD_LEAVES!r}, {GRAD_LEAVES!r}, True),
+       "sequential": measure({n}, {GRAD_LEAVES!r}, {GRAD_LEAVES!r}, False)}}
+print(json.dumps(res))
+"""
+            res = run_worker(worker, devices=n)
+            derived["measured_interleaved_us"] = res["interleaved"] * 1e6
+            derived["measured_sequential_us"] = res["sequential"] * 1e6
+        out.append({
+            "name": f"streams/{key}",
+            "us_per_call": sim["multi_span_rounds"] * sim["mean_round_s"] * 1e6,
+            "derived": derived,
+        })
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/streams_table.json", "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+    load_streams_table("experiments/streams_table.json")  # schema gate at source
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows(quick=True, dryrun=True):
+        print(r["name"], r["us_per_call"], json.dumps(r["derived"]))

@@ -10,6 +10,7 @@
   inkernel: persistent single-launch executor replay    (comm.executors)
   ragged: allgatherv/alltoallv skew-regime sweep        (comm ragged ops)
   faults: fault-injection contract sweep                (comm.faults)
+  streams: multi-stream link scheduler, arbitrated vs naive (comm.streams)
 
 Prints ``name,us_per_call,derived`` CSV; also writes experiments/bench.json
 (and the tuner/allreduce suites their experiments/*_table.json artifacts —
@@ -45,6 +46,7 @@ def main() -> None:
         bench_intranode,
         bench_overlap,
         bench_ragged,
+        bench_streams,
         bench_tuner_table,
         bench_vgg_cntk,
     )
@@ -57,6 +59,7 @@ def main() -> None:
         "inkernel": bench_inkernel.rows,
         "ragged": bench_ragged.rows,
         "faults": bench_faults.rows,
+        "streams": bench_streams.rows,
         "fig1": bench_intranode.rows,
         "fig2": bench_internode.rows,
         "fig3": bench_vgg_cntk.rows,

@@ -12,6 +12,8 @@ Layering (DESIGN.md Sec. 3):
                          ->  comm.plan      (CollectivePlan: decide + build)
                          ->  comm.executors (shard_map replay, fused loops)
                          ->  comm.api       (pbcast/pallreduce/... + *_tree)
+                         ->  comm.streams   (multi-stream link scheduler;
+                                             comm.overlap = 1-stream case)
                          ->  comm.tables    (validated experiments/ artifacts)
 
 Consumers: ``train.train_step`` (sync_mode='tuned_allreduce'),
@@ -52,6 +54,7 @@ from .overlap import (
 )
 from .plan import (
     CollectivePlan,
+    cache_stats,
     decide,
     expected_wire_bytes,
     plan_cache_clear,
@@ -61,6 +64,18 @@ from .plan import (
     plan_degraded,
 )
 from .resilience import FallbackEvent, FallbackPolicy, StragglerReport, Watchdog
+from .streams import (
+    StreamEntry,
+    StreamGraph,
+    StreamGraphError,
+    StreamSpec,
+    dispatch_schedule,
+    execute_stream_entry,
+    execute_streams,
+    graph_key,
+    plan_streams,
+    simulate_streams,
+)
 from .tables import (
     TableSchemaError,
     load_bench,
@@ -68,6 +83,7 @@ from .tables import (
     load_fault_table,
     load_inkernel_table,
     load_overlap_table,
+    load_streams_table,
     load_tuner_table,
     tuner_from_table,
 )
@@ -83,6 +99,7 @@ __all__ = [
     "plan_cached",
     "plan_cache_info",
     "plan_cache_clear",
+    "cache_stats",
     "decide",
     "expected_wire_bytes",
     "execute_collective",
@@ -105,10 +122,21 @@ __all__ = [
     "simulate_overlap",
     "execute_overlap",
     "overlap_allreduce_tree",
+    "StreamSpec",
+    "StreamEntry",
+    "StreamGraph",
+    "StreamGraphError",
+    "graph_key",
+    "plan_streams",
+    "simulate_streams",
+    "dispatch_schedule",
+    "execute_streams",
+    "execute_stream_entry",
     "TableSchemaError",
     "load_tuner_table",
     "load_bench",
     "load_overlap_table",
+    "load_streams_table",
     "load_compile_table",
     "load_fault_table",
     "load_inkernel_table",

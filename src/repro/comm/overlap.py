@@ -6,28 +6,28 @@ chunked chain overlaps the stages of one broadcast, and the application win
 comes from hiding communication behind training compute. Awan et al.
 (1810.11112) show the same structure — bucketed collectives streamed
 against backprop — is what makes CUDA-Aware MPI competitive for TF
-training. This module is that layer for the ``repro.comm`` plan stack: it
-turns a :class:`~repro.core.bucketing.BucketSpec` plus per-bucket
-:class:`~repro.comm.plan.CollectivePlan`s into an *interleaved* execution.
+training.
 
-Three pieces:
+Since the multi-stream refactor (DESIGN.md Sec. 13) this module is the
+SINGLE-STREAM special case of :mod:`repro.comm.streams`: an
+:class:`OverlapPlan` is exactly a 1-entry :class:`~repro.comm.streams.StreamGraph`,
+and every function here is a thin wrapper —
 
-* :func:`plan_overlap` / :class:`OverlapPlan` — host-side planning: buckets
-  are dispatched in REVERSE tree-flatten order (backward-order streaming,
-  the DDP/Horovod pattern — gradients of late layers materialize first),
-  and the in-flight window (``overlap_depth``) is chosen by
-  :func:`repro.core.cost_model.t_overlapped` unless a tuner table carries a
-  tuned depth for the bucket (``Decision.overlap_depth``).
-* :func:`simulate_overlap` — a round-accurate discrete simulator that
-  prices the overlapped timeline against the barrier schedule
-  (``pallreduce_tree``'s all-compute-then-all-comm lowering) and accounts
-  network idle rounds and wire bytes.
-* :func:`execute_overlap` / :func:`overlap_allreduce_tree` — the traced
-  execution: per-bucket collectives are IDENTICAL to the barrier path
-  (same ``CollectivePlan``, same ``apply_plan`` lanes, bit-for-summation-
-  order equal results); only the dispatch order and the ``chunked_copy``
-  staging interleave differ, which is exactly what lets the XLA scheduler
-  overlap bucket k+1's staging DMA with bucket k's in-flight collective.
+* :func:`plan_overlap` delegates to :func:`streams.plan_streams` with one
+  :class:`~repro.comm.streams.StreamSpec` (same depth-resolution tiers,
+  same ``plan_cached`` path keyed on the graph fingerprint);
+* :func:`simulate_overlap` replays the 1-entry graph through
+  :func:`streams.simulate_streams` (the multi-stream arbiter reduces
+  bit-exactly to ``cost_model.window_finish_times`` for one stream) and
+  re-shapes the accounting into the PR 4 keys;
+* :func:`execute_overlap` / :func:`overlap_allreduce_tree` replay through
+  :func:`streams.execute_stream_entry` — the identical staging-window
+  loop, so traced programs are unchanged.
+
+The wrappers are kept as the named entry points because every
+single-stream consumer (trainer grad sync, bench_overlap, the overlap
+table) speaks this vocabulary; multi-stream consumers use
+``comm.streams`` directly.
 """
 from __future__ import annotations
 
@@ -38,9 +38,9 @@ from jax import lax
 
 from ..core import bucketing, cost_model
 from ..core.bucketing import BucketSpec
-from ..core.tuner import Tuner, default_tuner
-from . import api as comm_api
-from .plan import CollectivePlan, plan_cached
+from ..core.tuner import Tuner
+from . import streams
+from .plan import CollectivePlan
 
 __all__ = [
     "OverlapPlan",
@@ -50,15 +50,19 @@ __all__ = [
     "overlap_allreduce_tree",
 ]
 
-# analytic depth sweep ceiling: every extra slot is a live staged bucket
-# buffer in device memory, and t_overlapped flattens past a handful
-_MAX_DEPTH = 8
+# analytic depth sweep ceiling (shared with the multi-stream planner)
+_MAX_DEPTH = streams._MAX_DEPTH
+
+# the canonical entry name a 1-stream graph carries
+_ENTRY = "overlap"
 
 
 @dataclasses.dataclass(frozen=True)
 class OverlapPlan:
     """A fully-resolved schedule-of-collectives: bucket mix + per-(axis,
-    bucket) plans + dispatch order + in-flight window."""
+    bucket) plans + dispatch order + in-flight window. Exactly the payload
+    of one :class:`~repro.comm.streams.StreamEntry` minus the arbitration
+    metadata (a single stream has nothing to contend with)."""
 
     op: str
     spec: BucketSpec
@@ -67,7 +71,23 @@ class OverlapPlan:
     order: tuple[int, ...]                       # bucket dispatch order
     overlap_depth: int
     compute_s: float                             # hidden-compute budget (s)
-    depth_source: str                            # 'manual' | 'empirical' | 'analytic'
+    depth_source: str            # 'manual' | 'stream' | 'empirical' | 'analytic'
+
+    def as_entry(self, name: str = _ENTRY, *, priority: int = 0,
+                 link: str = "ici", after: tuple[str, ...] = ()) -> streams.StreamEntry:
+        """This plan as a stream entry — the bridge every wrapper rides."""
+        return streams.StreamEntry(
+            name=name, op=self.op, spec=self.spec, axes=self.axes,
+            plans=self.plans, order=self.order,
+            overlap_depth=self.overlap_depth, compute_s=self.compute_s,
+            depth_source=self.depth_source, priority=priority, after=after,
+            link=link,
+        )
+
+    def as_graph(self) -> streams.StreamGraph:
+        """This plan as a 1-entry stream graph (the backward-compat
+        contract: its replay is bit-identical to this plan's)."""
+        return streams.StreamGraph((self.as_entry(),))
 
     @property
     def num_buckets(self) -> int:
@@ -76,22 +96,17 @@ class OverlapPlan:
     def bucket_comm_s(self) -> list[float]:
         """Per-bucket predicted collective time, summed over hierarchy
         levels, in DISPATCH order."""
-        return [
-            sum(self.plans[ax][k].predicted_s for ax in self.axes)
-            for k in self.order
-        ]
+        return self.as_entry().bucket_comm_s()
 
     def bucket_stage_s(self, hw: cost_model.Hardware | None = None) -> list[float]:
         """Per-bucket staging (pack / ``chunked_copy``) time in dispatch
         order: one HBM read + one HBM write of the bucket."""
-        hw = hw or cost_model.TPU_V5E
-        sizes = self.spec.bucket_bytes()
-        return [2.0 * sizes[k] / hw.hbm_bw for k in self.order]
+        return self.as_entry().bucket_stage_s(hw)
 
     def wire_bytes(self) -> int:
         """Total bytes on the wire — exactly the sum of the per-bucket plan
         accounting (overlap reorders transfers, it never adds any)."""
-        return sum(p.wire_bytes() for ax in self.axes for p in self.plans[ax])
+        return self.as_entry().wire_bytes()
 
     def barrier_s(self, hw: cost_model.Hardware | None = None) -> float:
         return cost_model.t_bucketed_barrier(
@@ -137,53 +152,33 @@ def plan_overlap(
     (gradient availability order during backprop); weight distribution
     passes ``reverse=False`` (buckets stream in load order).
 
-    Depth resolution order: explicit ``overlap_depth`` > a tuned
+    Depth resolution order (the multi-stream planner's tiers): explicit
+    ``overlap_depth`` > a ``stream:overlap`` tuner entry > a tuned
     ``overlap_depth`` in the tuner's per-op table (largest bucket's entry)
     > the analytic :func:`cost_model.optimal_overlap_depth` sweep.
     """
-    t = tuner or default_tuner()
-    spec = spec if spec is not None else bucketing.plan_buckets(tree, bucket_bytes)
-    inter = tuple(inter_pod_axes)
-    plans: dict[str, tuple[CollectivePlan, ...]] = {}
-    for ax, n in axes:
-        plans[ax] = tuple(
-            plan_cached(
-                op, max(M, 1), n, root=root, algo=algo, tuner=t,
-                inter_pod=(ax in inter),
+    graph = streams.plan_streams(
+        [
+            streams.StreamSpec(
+                name=_ENTRY, tree=tree, axes=tuple(tuple(a) for a in axes),
+                op=op, root=root, algo=algo, priority=0,
+                overlap_depth=overlap_depth, compute_s=compute_s,
+                bucket_bytes=bucket_bytes,
+                inter_pod_axes=tuple(inter_pod_axes), reverse=reverse,
+                spec=spec,
             )
-            for M in spec.bucket_bytes()
-        )
-    idx = range(spec.num_buckets)
-    order = tuple(reversed(idx)) if reverse else tuple(idx)
-
-    if overlap_depth is not None:
-        depth, source = max(1, int(overlap_depth)), "manual"
-    else:
-        depth, source = None, "analytic"
-        # consult the tuner table at the largest bucket (the depth that
-        # matters — small tail buckets drain inside any window)
-        sizes = spec.bucket_bytes()
-        if sizes:
-            k_big = max(range(len(sizes)), key=lambda k: sizes[k])
-            for ax, _n in axes:
-                d = plans[ax][k_big].decision.overlap_depth
-                if d is not None:
-                    depth, source = d, "empirical"
-                    break
-        if depth is None:
-            oplan0 = OverlapPlan(op, spec, tuple(a for a, _ in axes), plans,
-                                 order, 1, compute_s, "analytic")
-            depth = cost_model.optimal_overlap_depth(
-                oplan0.bucket_comm_s(), compute_s,
-                stage_s=oplan0.bucket_stage_s(), max_depth=_MAX_DEPTH,
-            )
+        ],
+        tuner=tuner,
+    )
+    e = graph.entries[0]
     return OverlapPlan(
-        op, spec, tuple(a for a, _ in axes), plans, order, depth, compute_s, source
+        e.op, e.spec, e.axes, e.plans, e.order, e.overlap_depth, e.compute_s,
+        e.depth_source,
     )
 
 
 # ---------------------------------------------------------------------------
-# round-accurate overlap simulator
+# round-accurate overlap simulator (1-entry graph replay)
 # ---------------------------------------------------------------------------
 
 
@@ -192,20 +187,13 @@ def simulate_overlap(
 ) -> dict:
     """Discrete-round replay of the overlapped timeline vs the barrier one.
 
-    Time is discretized into network rounds: bucket b costs its schedules'
-    round counts (summed over hierarchy levels; one-shot baselines count 1)
-    plus its staging rounds (``bucket_stage_s`` over the mean round
-    duration — this is what makes ``overlap_depth`` bind: staging of bucket
-    k needs a free slot in the window, exactly as in
-    :func:`cost_model.t_overlapped`). The backward pass produces one bucket
-    (in dispatch order) every ``compute_rounds_per_bucket`` rounds —
-    derived from ``compute_s`` and the mean round duration, floored at 1
-    (even free compute produces buckets sequentially, never all at once).
-
-    Returns idle-round and span accounting for both schedules. The
-    guaranteed invariant (tested): for >= 2 non-empty buckets the overlapped
-    schedule has STRICTLY fewer network-idle rounds than the barrier one —
-    the network starts on bucket 0 while later buckets are still computing.
+    Delegates to :func:`streams.simulate_streams` on the 1-entry graph —
+    for one stream the link arbiter IS the PR 4 greedy window recurrence
+    (``cost_model.window_finish_times``), so every round number is
+    identical to the pre-refactor simulator — and re-shapes the
+    multi-stream accounting into the historical keys. The guaranteed
+    invariant (tested): for >= 2 non-empty buckets the overlapped schedule
+    has STRICTLY fewer network-idle rounds than the barrier one.
 
     With ``faults`` (a :class:`comm.faults.FaultSpec`), every bucket's clock
     runs through the degraded ``timed_rounds`` (slow links, retransmit
@@ -215,74 +203,29 @@ def simulate_overlap(
     ranks raise ``DeadRankError`` from the first bucket's replay.
     """
     hw = hw or cost_model.TPU_V5E
-    rounds = []
-    times = []
-    healthy_times = []
-    for k in oplan.order:
-        r = 0
-        t = 0.0
-        t0 = 0.0
-        for ax in oplan.axes:
-            p = oplan.plans[ax][k]
-            r += p.schedule.num_rounds if p.schedule is not None else (
-                0 if p.algo == "noop" else 1
-            )
-            if p.schedule is not None:
-                t0 += p.timed_rounds_s(hw)
-                t += p.timed_rounds_s(hw, faults=faults) if faults is not None else 0.0
-        rounds.append(max(r, 1))
-        times.append(t if faults is not None else t0)
-        healthy_times.append(t0)
-    K = len(rounds)
-    total_comm_rounds = sum(rounds)
-    mean_round_s = (sum(times) / total_comm_rounds) if total_comm_rounds else hw.ts
-    mean_round_s = max(mean_round_s, hw.ts)
-    stage_rounds = [
-        int(round(s / mean_round_s)) for s in oplan.bucket_stage_s(hw)
-    ]
-    total_stage_rounds = sum(stage_rounds)
-    per_bucket_compute = max(
-        1, int(round(oplan.compute_s / max(K, 1) / mean_round_s))
-    ) if K else 0
-
+    sim = streams.simulate_streams(oplan.as_graph(), hw, faults=faults)
+    s = sim["streams"][_ENTRY]
+    K = s["num_buckets"]
     # barrier: all compute, then all staging, then every transfer
-    barrier_span = K * per_bucket_compute + total_stage_rounds + total_comm_rounds
-    barrier_idle = K * per_bucket_compute + total_stage_rounds
-
-    # overlapped: the SAME greedy window recurrence the analytic depth
-    # tuner prices (cost_model.window_finish_times), in integer rounds —
-    # staging bucket k needs a free slot in the depth-deep window
-    depth = max(1, min(oplan.overlap_depth, max(K, 1)))
-    comm_end = cost_model.window_finish_times(
-        [(k + 1) * per_bucket_compute for k in range(K)],
-        stage_rounds,
-        rounds,
-        depth,
-    )
-    overlap_span = comm_end[-1] if K else 0
-    overlap_idle = overlap_span - total_comm_rounds
-
+    barrier_idle = s["compute_rounds"] + s["stage_rounds"]
     out = {
         "num_buckets": K,
-        "overlap_depth": depth,
-        "comm_rounds": total_comm_rounds,
-        "compute_rounds": K * per_bucket_compute,
-        "barrier_span_rounds": barrier_span,
-        "overlap_span_rounds": overlap_span,
+        "overlap_depth": max(1, min(oplan.overlap_depth, max(K, 1))),
+        "comm_rounds": s["comm_rounds"],
+        "compute_rounds": s["compute_rounds"],
+        "barrier_span_rounds": barrier_idle + s["comm_rounds"],
+        "overlap_span_rounds": s["finish_round"],
         "idle_rounds_barrier": barrier_idle,
-        "idle_rounds_overlap": overlap_idle,
+        "idle_rounds_overlap": s["idle_rounds"],
         "barrier_s": oplan.barrier_s(hw),
         "overlapped_s": oplan.overlapped_s(hw),
         "efficiency": oplan.efficiency(hw),
         "wire_bytes": oplan.wire_bytes(),
     }
     if faults is not None:
-        healthy = sum(healthy_times)
-        faulty = sum(times)
-        out["comm_s_healthy"] = healthy
-        out["comm_s_faulty"] = faulty
-        out["fault_slowdown"] = faulty / healthy if healthy > 0 else 1.0
-        out["fault_fingerprint"] = faults.fingerprint()
+        for key in ("comm_s_healthy", "comm_s_faulty", "fault_slowdown",
+                    "fault_fingerprint"):
+            out[key] = sim[key]
     return out
 
 
@@ -307,35 +250,15 @@ def execute_overlap(
     double-buffer interleave that lets the scheduler run staging DMA
     concurrently with the in-flight collective.
 
-    Per-bucket math is identical to the barrier ``*_tree`` path (same
-    plans, same executors), so results match it to float summation order.
+    Delegates to :func:`streams.execute_stream_entry` on the 1-entry
+    graph: per-bucket math is identical to the barrier ``*_tree`` path
+    (same plans, same executors), so results match it to float
+    summation order.
     """
-    buckets = bucketing.pack_buckets(tree, oplan.spec)
-    order = [k for k in oplan.order if buckets[k].size]
-    out: list = list(buckets)  # empty buckets pass through untouched
-
-    staged: dict[int, Any] = {}
-
-    def _stage(k: int) -> None:
-        b = buckets[k]
-        if stage:
-            from ..kernels.chunked_copy import chunked_copy
-
-            b = chunked_copy(b, chunk_elems=stage_chunk)
-        staged[k] = b
-
-    depth = max(1, oplan.overlap_depth)
-    for i, k in enumerate(order):
-        for j in order[i : i + depth]:   # keep the window staged ahead
-            if j not in staged:
-                _stage(j)
-        b = staged.pop(k)
-        for ax in oplan.axes:
-            b = comm_api.apply_plan(
-                oplan.plans[ax][k], b, ax, fused=fused, compiled=compiled
-            )
-        out[k] = b
-    return bucketing.unpack_buckets(out, oplan.spec)
+    return streams.execute_stream_entry(
+        oplan.as_entry(), tree, stage=stage, stage_chunk=stage_chunk,
+        fused=fused, compiled=compiled,
+    )
 
 
 def overlap_allreduce_tree(

@@ -24,6 +24,7 @@ __all__ = [
     "plan_cached",
     "plan_cache_info",
     "plan_cache_clear",
+    "cache_stats",
     "decide",
     "expected_wire_bytes",
 ]
@@ -381,7 +382,7 @@ def plan_degraded(
 
 _PLAN_CACHE: "OrderedDict[tuple, CollectivePlan]" = OrderedDict()
 _PLAN_CACHE_MAX = 512
-_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def plan_cached(
@@ -397,16 +398,17 @@ def plan_cached(
     sizes=None,
     health=None,
     exec_path: str | None = None,
+    stream: str | None = None,
 ) -> CollectivePlan:
     """LRU-cached :func:`plan_collective`. Key: (op, M, n, root, algo,
-    num_chunks, inter_pod, sizes vector, exec_path, tuner fingerprint,
-    health fingerprint). The buffer dtype is already folded into ``M`` (a byte
-    count), so same-point calls from different dtypes correctly share one
-    plan; ragged plans for different size vectors never collide (the
-    canonical flat vector is in the key). Plans are frozen and their
-    schedules immutable, so sharing the object across callers (and across
-    traced programs) is safe; the pre-lowered round tables ride along via
-    ``CollectivePlan.lowered()``'s own cache.
+    num_chunks, inter_pod, sizes vector, exec_path, stream-graph
+    fingerprint, tuner fingerprint, health fingerprint). The buffer dtype
+    is already folded into ``M`` (a byte count), so same-point calls from
+    different dtypes correctly share one plan; ragged plans for different
+    size vectors never collide (the canonical flat vector is in the key).
+    Plans are frozen and their schedules immutable, so sharing the object
+    across callers (and across traced programs) is safe; the pre-lowered
+    round tables ride along via ``CollectivePlan.lowered()``'s own cache.
 
     ``health`` (a :class:`comm.faults.MeshHealth`) routes degraded meshes
     through :func:`plan_degraded`; its content fingerprint sits in the key
@@ -414,7 +416,12 @@ def plan_cached(
     link degrading or recovering) can never serve a plan built for the
     pre-fault mesh. ``exec_path`` pins the executor tier on the Decision
     (see :func:`decide`); it is a key component so callers pinning
-    different tiers never share a plan object."""
+    different tiers never share a plan object. ``stream`` is the opaque
+    stream-graph fingerprint from :func:`repro.comm.streams.plan_streams`
+    — plans resolved inside one graph shape never leak into another (or
+    into the stream-less single-collective path, which keys ``None``).
+
+    Hit/miss/eviction counters are observable via :func:`cache_stats`."""
     if exec_path is not None and exec_path not in ("inkernel", "compiled", "unrolled"):
         raise ValueError(
             f"exec_path must be 'inkernel'|'compiled'|'unrolled', got {exec_path!r}"
@@ -431,6 +438,7 @@ def plan_cached(
         bool(inter_pod),
         sizes,
         exec_path,
+        None if stream is None else str(stream),
         t.fingerprint(),
         None if health is None else health.fingerprint(),
     )
@@ -453,16 +461,24 @@ def plan_cached(
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
         _PLAN_CACHE.popitem(last=False)
+        _PLAN_CACHE_STATS["evictions"] += 1
     return plan
 
 
-def plan_cache_info() -> dict:
+def cache_stats() -> dict:
+    """Snapshot of the plan cache's observability counters: cumulative
+    ``hits``/``misses``/``evictions`` since the last
+    :func:`plan_cache_clear`, plus current ``size`` and ``maxsize``."""
     return dict(_PLAN_CACHE_STATS, size=len(_PLAN_CACHE), maxsize=_PLAN_CACHE_MAX)
+
+
+# historical name — same snapshot
+plan_cache_info = cache_stats
 
 
 def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
-    _PLAN_CACHE_STATS.update(hits=0, misses=0)
+    _PLAN_CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
 
 def expected_wire_bytes(op: str, algo: str, M: int, n: int, num_chunks: int = 1,

@@ -261,6 +261,13 @@ class RunConfig:
     # backward-pass seconds the overlap engine may hide collectives behind
     # (0.0 = depth tuning assumes staging-bound, still streams buckets)
     overlap_compute_s: float = 0.0
+    # second comm stream for sync_mode='overlap_allreduce': broadcast the
+    # UPDATED params right after optimizer.update as a lower-priority
+    # 'weight_prefetch' stream entry DAG-ordered after 'grad_sync'
+    # (comm.streams link scheduler). Params are replicated, so the bcast
+    # is value-identical — it pre-stages next step's weights on the wire
+    # schedule without changing any result bit.
+    prefetch_stream: bool = False
     bcast_bucket_bytes: int = 4 << 20
     num_microbatches: int = 1
     remat: bool = True

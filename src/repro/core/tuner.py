@@ -371,6 +371,33 @@ class Tuner:
         entry["overlap_depth"] = max(1, int(depth))
         self._version += 1
 
+    def record_stream(self, name: str, *, overlap_depth: int | None = None,
+                      priority: int | None = None) -> None:
+        """Record a per-stream scheduling decision under a ``stream:<name>``
+        key: the in-flight window and/or arbitration priority the
+        multi-stream planner (:func:`repro.comm.streams.plan_streams`)
+        falls back to when the :class:`StreamSpec` leaves them None. Like
+        depth-only entries these are schedule-STRUCTURE choices, not
+        timings — they survive ``allow_dryrun`` loads. Idempotent:
+        re-recording an unchanged decision does NOT bump the content
+        fingerprint (so factory-time recording never churns the plan
+        cache step over step)."""
+        key = f"stream:{name}"
+        entry = dict(self.table.get(key, {}))
+        if overlap_depth is not None:
+            entry["overlap_depth"] = max(1, int(overlap_depth))
+        if priority is not None:
+            entry["priority"] = int(priority)
+        if not entry or entry == self.table.get(key):
+            return
+        self.table[key] = entry
+        self._version += 1
+
+    def stream_decision(self, name: str) -> dict:
+        """The recorded ``stream:<name>`` entry (possibly-empty dict copy
+        with ``overlap_depth``/``priority`` keys)."""
+        return dict(self.table.get(f"stream:{name}", {}))
+
     def calibrate(
         self,
         measure: Callable[[str, int, int, int], float],
@@ -488,10 +515,12 @@ class Tuner:
         even then their MEASURED entries are DROPPED after schema
         validation, so a dry-run artifact can be format-checked but a
         simulator clock can never masquerade as empirical tuning data.
-        Depth-only entries (``record_overlap``) survive the drop: an
-        overlap window is a schedule-structure choice from the analytic
-        sweep, not a timing measurement, so ``plan_overlap`` may consume it
-        from a dryrun artifact (``experiments/overlap_depths.json``)."""
+        Depth-only entries (``record_overlap``) and per-stream decisions
+        (``record_stream``, ``stream:<name>`` keys) survive the drop: an
+        overlap window or an arbitration priority is a schedule-structure
+        choice, not a timing measurement, so ``plan_overlap`` /
+        ``plan_streams`` may consume them from a dryrun artifact
+        (``experiments/overlap_depths.json``)."""
         try:
             with open(path) as f:
                 payload = json.load(f)
@@ -531,6 +560,19 @@ class Tuner:
                     f"{path}: entry {key!r} exec_path must be "
                     f"'inkernel'|'compiled'|'unrolled', got {entry['exec_path']!r}"
                 )
+            if key.startswith("stream:"):
+                # per-stream scheduling decisions (record_stream): structure
+                # choices only — never algo/num_chunks/measured_s
+                if not set(entry) <= {"overlap_depth", "priority"}:
+                    raise TunerTableError(
+                        f"{path}: stream entry {key!r} may only carry "
+                        f"overlap_depth/priority, got {sorted(entry)}"
+                    )
+                if "priority" in entry and not isinstance(entry["priority"], int):
+                    raise TunerTableError(
+                        f"{path}: stream entry {key!r} priority must be an int"
+                    )
+                continue
             if set(entry) == {"overlap_depth"}:
                 continue  # depth-only entry (record_overlap, no measurement)
             if not {"algo", "num_chunks", "measured_s"} <= set(entry):
@@ -557,7 +599,8 @@ class Tuner:
                     "dropped, depth-only entries kept)"
                 )
             table = {
-                k: e for k, e in table.items() if set(e) == {"overlap_depth"}
+                k: e for k, e in table.items()
+                if set(e) == {"overlap_depth"} or k.startswith("stream:")
             }
         return cls(
             hw,

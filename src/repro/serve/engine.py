@@ -21,7 +21,13 @@ from ..dist import topology
 from ..dist.sharding import cache_specs, param_specs
 from ..models import Model
 
-__all__ = ["Engine", "GenerationResult", "distribute_weights", "plan_distribution"]
+__all__ = [
+    "Engine",
+    "GenerationResult",
+    "distribute_weights",
+    "distribution_stream_graph",
+    "plan_distribution",
+]
 
 
 def _placements(mesh, specs):
@@ -117,13 +123,15 @@ class Engine:
 
 
 def plan_distribution(params, mesh, *, algo: str = "auto", tuner=None,
-                      bucket_bytes: int = 4 << 20):
+                      bucket_bytes: int = 4 << 20, stream: str | None = None):
     """Host-side planning for weight distribution: pack the parameter tree
     into same-dtype buckets and resolve one :class:`~repro.comm.
     CollectivePlan` per (bucket, mesh level) — inter-pod level first, priced
     with the tuner's ``inter_pod`` constants. Returns ``(bucket_spec,
     {axis_name: [plan per bucket]})``; the plans are inspectable (algorithm,
-    chunking, predicted time, bytes on wire) before anything is traced."""
+    chunking, predicted time, bytes on wire) before anything is traced.
+    ``stream`` keys the plan cache on a stream-graph fingerprint (see
+    :func:`distribution_stream_graph`)."""
     from ..core import bucketing
 
     spec = bucketing.plan_buckets(params, bucket_bytes)
@@ -137,11 +145,73 @@ def plan_distribution(params, mesh, *, algo: str = "auto", tuner=None,
         plans[ax] = [
             comm.plan_cached(
                 "bcast", M, n, algo=algo, tuner=tuner,
-                inter_pod=topology.is_inter_pod(ax),
+                inter_pod=topology.is_inter_pod(ax), stream=stream,
             )
             for M in spec.bucket_bytes()
         ]
     return spec, plans
+
+
+def distribution_stream_graph(params, mesh, *, algo: str = "auto", tuner=None,
+                              bucket_bytes: int = 4 << 20,
+                              double_buffer: bool = False,
+                              overlap_depth: int = 2, drain: bool = False):
+    """Weight distribution as a :class:`~repro.comm.StreamGraph`.
+
+    Two prioritized entries on distinct links:
+
+    * ``ckpt_drain`` (present when ``drain``) — the host-side snapshot of
+      the pre-distribution weights, priority 2 on the ``host`` link. It
+      carries the same bucket mix but no collective plans (one round per
+      bucket over the host link in the simulator's accounting).
+    * ``distribute`` — the tuned hierarchical broadcast over
+      ``topology.bcast_axes(mesh)``, DAG-ordered ``after`` the drain
+      (snapshot-before-donate: the drain must hold a valid copy before
+      donation can invalidate the buffers), ``overlap_depth`` staging
+      buffers deep when ``double_buffer``.
+
+    The graph fingerprint is computed from the raw request BEFORE any plan
+    resolves and keys ``plan_cached`` (``stream=``), so distribution plans
+    never collide with another graph shape's at the same (op, M, n) point.
+    Returns ``(graph, bucket_spec, plans)``."""
+    from ..comm import streams as comm_streams
+    from ..core import bucketing
+
+    spec = bucketing.plan_buckets(params, bucket_bytes)
+    sizes = topology.axis_sizes(mesh)
+    axes = list(topology.bcast_axes(mesh))
+    depth = max(1, int(overlap_depth)) if double_buffer else 1
+    gkey = comm_streams.graph_key({
+        "consumer": "serve.distribute_weights",
+        "op": "bcast",
+        "algo": algo,
+        "axes": [[ax, int(sizes[ax])] for ax in axes],
+        "buckets": list(spec.bucket_bytes()),
+        "depth": depth,
+        "drain": bool(drain),
+    })
+    bucket_spec, plans = plan_distribution(
+        params, mesh, algo=algo, tuner=tuner, bucket_bytes=bucket_bytes,
+        stream=gkey,
+    )
+    order = tuple(range(bucket_spec.num_buckets))  # load order, not reversed
+    entries = []
+    after: tuple[str, ...] = ()
+    if drain:
+        entries.append(comm_streams.StreamEntry(
+            name="ckpt_drain", op="drain", spec=bucket_spec, axes=(),
+            plans={}, order=order, overlap_depth=1, compute_s=0.0,
+            depth_source="manual", priority=2, after=(), link="host",
+        ))
+        after = ("ckpt_drain",)
+    entries.append(comm_streams.StreamEntry(
+        name="distribute", op="bcast", spec=bucket_spec, axes=tuple(plans),
+        plans={ax: tuple(ax_plans) for ax, ax_plans in plans.items()},
+        order=order, overlap_depth=depth, compute_s=0.0,
+        depth_source="manual", priority=1, after=after, link="ici",
+    ))
+    graph = comm_streams.StreamGraph(tuple(entries), key=gkey)
+    return graph, bucket_spec, plans
 
 
 def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=None,
@@ -162,11 +232,15 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
     exactly where the serving/training layout declares. ``return_plans=True``
     additionally returns the executed plan table.
 
-    ``double_buffer=True`` routes execution through the overlap engine
-    (``comm.execute_overlap``): bucket k+1 is staged through the
-    ``chunked_copy`` Pallas pipeline (Sec. IV-C) while bucket k's broadcast
-    is in flight — ``overlap_depth`` staging buffers deep, buckets in load
-    order. Per-bucket collectives are the SAME plans either way, so the
+    Execution rides the multi-stream layer: distribution is the
+    ``distribute`` entry of :func:`distribution_stream_graph` (with a
+    ``ckpt_drain`` entry DAG-ordered before it when ``drain_dir`` is set —
+    program order realizes the edge: the snapshot is fetched before the
+    broadcast program runs). ``double_buffer=True`` widens the entry's
+    staging window: bucket k+1 is staged through the ``chunked_copy``
+    Pallas pipeline (Sec. IV-C) while bucket k's broadcast is in flight —
+    ``overlap_depth`` staging buffers deep, buckets in load order.
+    Per-bucket collectives are the SAME plans either way, so the
     distributed weights are identical.
 
     ``donate=True`` donates the incoming weight buffers to the broadcast
@@ -185,39 +259,18 @@ def distribute_weights(params, mesh, *, algo: str = "auto", tuner=None, specs=No
     never a silent partial distribution. The drain fetches the host copy
     before donation hands the buffers to the program, so the snapshot is
     valid even when ``donate=True`` invalidated the device buffers."""
-    from ..core import bucketing
-
-    bucket_spec, plans = plan_distribution(
-        params, mesh, algo=algo, tuner=tuner, bucket_bytes=bucket_bytes
+    graph, bucket_spec, plans = distribution_stream_graph(
+        params, mesh, algo=algo, tuner=tuner, bucket_bytes=bucket_bytes,
+        double_buffer=double_buffer, overlap_depth=overlap_depth,
+        drain=drain_dir is not None,
     )
+    dist_entry = graph.entry("distribute")
 
-    if double_buffer:
-        oplan = comm.OverlapPlan(
-            op="bcast",
-            spec=bucket_spec,
-            axes=tuple(plans),
-            plans={ax: tuple(ax_plans) for ax, ax_plans in plans.items()},
-            order=tuple(range(bucket_spec.num_buckets)),
-            overlap_depth=max(1, int(overlap_depth)),
-            compute_s=0.0,
-            depth_source="manual",
+    def run(p):
+        return comm.execute_stream_entry(
+            dist_entry, p, stage=double_buffer, stage_chunk=stage_chunk,
+            compiled=compiled,
         )
-
-        def run(p):
-            return comm.execute_overlap(
-                oplan, p, stage=True, stage_chunk=stage_chunk, compiled=compiled
-            )
-
-    else:
-
-        def run(p):
-            buckets = bucketing.pack_buckets(p, bucket_spec)
-            for ax, ax_plans in plans.items():
-                buckets = [
-                    comm.apply_plan(plan, b, ax, compiled=compiled) if b.size else b
-                    for plan, b in zip(ax_plans, buckets)
-                ]
-            return bucketing.unpack_buckets(buckets, bucket_spec)
 
     f = jax.shard_map(
         run,

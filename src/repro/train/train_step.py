@@ -43,6 +43,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..comm import hierarchical_allreduce_axes, overlap_allreduce_tree, pallreduce_tree
+from ..comm.streams import StreamSpec, execute_stream_entry, plan_streams
 from ..configs.base import RunConfig
 from ..core.algorithms import ring_allreduce
 from ..core.bcast import pbcast_tree, preduce_sum
@@ -255,23 +256,100 @@ def make_overlap_allreduce_train_step(
     (``run_cfg.overlap_depth``; ``None`` = tuned), letting the scheduler
     hide collectives behind the rest of the step (the CNTK end-to-end
     pattern, paper Sec. V-D; Awan et al. 1810.11112).
+
+    With ``run_cfg.prefetch_stream`` the step carries a SECOND comm stream:
+    right after ``optimizer.update`` the updated (replicated) parameters are
+    re-broadcast as a lower-priority ``weight_prefetch`` entry of a 2-entry
+    :class:`~repro.comm.streams.StreamGraph`, DAG-ordered ``after`` the
+    ``grad_sync`` entry. The bcast is value-identical (every rank already
+    holds the same params), so results are bit-unchanged — what it buys is
+    the wire schedule: next step's weights are pre-staged on the link the
+    arbiter grants between gradient buckets. Both entries resolve through
+    ``plan_streams`` (shared ``plan_cached`` path keyed on the graph
+    fingerprint), and the DAG edge is realized by program order — grad sync
+    executes inside the step, the prefetch entry after the update.
     """
+    if not run_cfg.prefetch_stream:
+
+        def sync(grads, axes, inter_pod_axes):
+            return overlap_allreduce_tree(
+                grads,
+                axes,
+                algo=run_cfg.allreduce_algo,
+                tuner=tuner,
+                bucket_bytes=run_cfg.bcast_bucket_bytes,
+                inter_pod_axes=inter_pod_axes,
+                overlap_depth=run_cfg.overlap_depth,
+                compute_s=run_cfg.overlap_compute_s,
+                compiled=run_cfg.compiled_collectives,
+            )
+
+        return _make_comm_sync_step(
+            model, run_cfg, mesh, sync, optimizer, lr_fn, mode="overlap_allreduce"
+        )
+
+    from ..dist import topology
+
+    if tuner is not None:
+        # surface the stream decisions in the tuner table (stream:* entries
+        # survive save/load, so a calibrated table pins them for later runs)
+        tuner.record_stream(
+            "grad_sync", priority=1, overlap_depth=run_cfg.overlap_depth
+        )
+        tuner.record_stream("weight_prefetch", priority=0)
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sized_axes = tuple(
+        (a, axis_sizes[a])
+        for a in hierarchical_allreduce_axes(mesh)
+        if axis_sizes.get(a, 1) > 1
+    )
+    inter = tuple(topology.inter_pod_axes(mesh))
+    pshapes = model.param_shapes()
+    # grads share the params' treedef/shapes; the microbatch accumulator
+    # holds them in f32 (see _grad_fn), so the grad_sync bucket mix must be
+    # planned at that dtype
+    gshapes = pshapes
+    if run_cfg.num_microbatches > 1:
+        gshapes = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), pshapes
+        )
+    graph = plan_streams(
+        [
+            StreamSpec(
+                name="grad_sync", tree=gshapes, axes=sized_axes,
+                op="allreduce", algo=run_cfg.allreduce_algo, priority=1,
+                overlap_depth=run_cfg.overlap_depth,
+                compute_s=run_cfg.overlap_compute_s,
+                bucket_bytes=run_cfg.bcast_bucket_bytes,
+                inter_pod_axes=inter, reverse=True,
+            ),
+            StreamSpec(
+                name="weight_prefetch", tree=pshapes, axes=sized_axes,
+                op="bcast", algo=run_cfg.bcast_algo, priority=0,
+                after=("grad_sync",),
+                bucket_bytes=run_cfg.bcast_bucket_bytes,
+                inter_pod_axes=inter, reverse=False,
+            ),
+        ],
+        tuner=tuner,
+    )
+    grad_entry = graph.entry("grad_sync")
+    prefetch_entry = graph.entry("weight_prefetch")
 
     def sync(grads, axes, inter_pod_axes):
-        return overlap_allreduce_tree(
-            grads,
-            axes,
-            algo=run_cfg.allreduce_algo,
-            tuner=tuner,
-            bucket_bytes=run_cfg.bcast_bucket_bytes,
-            inter_pod_axes=inter_pod_axes,
-            overlap_depth=run_cfg.overlap_depth,
-            compute_s=run_cfg.overlap_compute_s,
-            compiled=run_cfg.compiled_collectives,
+        return execute_stream_entry(
+            grad_entry, grads, compiled=run_cfg.compiled_collectives
+        )
+
+    def post_update(params, axes, inter_pod_axes):
+        return execute_stream_entry(
+            prefetch_entry, params, compiled=run_cfg.compiled_collectives
         )
 
     return _make_comm_sync_step(
-        model, run_cfg, mesh, sync, optimizer, lr_fn, mode="overlap_allreduce"
+        model, run_cfg, mesh, sync, optimizer, lr_fn,
+        mode="overlap_allreduce", post_update=post_update,
     )
 
 
@@ -344,9 +422,13 @@ def make_degraded_psum_train_step(
     return _wrap_dp_step(local_step, mesh, dp)
 
 
-def _make_comm_sync_step(model, run_cfg, mesh, sync, optimizer, lr_fn, *, mode):
+def _make_comm_sync_step(model, run_cfg, mesh, sync, optimizer, lr_fn, *, mode,
+                         post_update=None):
     """Shared body of the repro.comm gradient-sync modes: pure-DP shard_map
-    step whose gradient all-reduce is ``sync(grads, axes, inter_pod_axes)``."""
+    step whose gradient all-reduce is ``sync(grads, axes, inter_pod_axes)``.
+    ``post_update(params, axes, inter_pod_axes)`` runs right after the
+    optimizer step — the hook the weight-prefetch stream entry rides
+    (value-preserving: it must return params unchanged up to layout)."""
     from ..dist import topology
 
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -367,6 +449,8 @@ def _make_comm_sync_step(model, run_cfg, mesh, sync, optimizer, lr_fn, *, mode):
         grads, gnorm = clip_by_global_norm(grads, 1.0)
         lr = lr_fn(opt_state["step"])
         params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        if post_update is not None:
+            params = post_update(params, axes, inter_pod_axes)
         loss = jax.lax.pmean(loss, dp)
         out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         out.update({k: jax.lax.pmean(v, dp) for k, v in metrics.items()})

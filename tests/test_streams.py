@@ -1,0 +1,592 @@
+"""Multi-stream link scheduler (comm.streams + cost_model.multi_stream_finish_times).
+
+Covers the refactor's contracts:
+
+* the multi-stream arbiter reduces BIT-EXACTLY to the PR 4 single-stream
+  window recurrence (``window_finish_times``) for one stream;
+* scheduler properties — fairness (max skip count within the graph's
+  bound), no-idle (every dispatch starts at ``max(link_free, min_ready)``),
+  per-link serial occupancy, and arbitration never exceeding naive
+  serialization (strictly beating it when compute gaps leave link idle);
+* backward compat — a 1-entry StreamGraph replays bit-identically to
+  ``execute_overlap`` and round-identically in ``simulate_overlap``;
+* plan-cache observability — hit/miss/evict counters under LRU pressure
+  and fingerprint invalidation across health/exec_path/size/stream keys;
+* tuner ``stream:*`` entries round-tripping through save/load;
+* faults composing per the PR 7 contract;
+* the trainer's ``prefetch_stream`` and the serve distribution graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.comm import plan as plan_mod
+from repro.comm.faults import DeadRankError, FaultSpec, MeshHealth
+from repro.comm.overlap import plan_overlap, simulate_overlap
+from repro.comm.plan import cache_stats, plan_cache_clear, plan_cached
+from repro.comm.streams import (
+    StreamGraph,
+    StreamGraphError,
+    StreamSpec,
+    dispatch_schedule,
+    plan_streams,
+    simulate_streams,
+)
+from repro.core import cost_model
+from repro.core.tuner import Tuner, TunerTableError
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback — see tests/_compat.py
+    from _compat import given, settings, strategies as st
+
+
+def _tree(leaves):
+    return {
+        f"l{i}": jax.ShapeDtypeStruct((e,), np.float32)
+        for i, e in enumerate(leaves)
+    }
+
+
+MIX = [65536, 65536, 4096, 4096, 512, 512, 64, 64]
+
+
+def _rand_demand(rng, *, link="ici", priority=0, after=()):
+    K = rng.randint(1, 6)
+    return {
+        "avail": sorted(rng.randint(0, 20) for _ in range(K)),
+        "stage": [rng.randint(0, 3) for _ in range(K)],
+        "comm": [[1] * rng.randint(1, 5) for _ in range(K)],
+        "depth": rng.randint(1, 4),
+        "priority": priority,
+        "link": link,
+        "after": after,
+    }
+
+
+# ---------------------------------------------------------------------------
+# the scheduler core (cost_model.multi_stream_finish_times)
+# ---------------------------------------------------------------------------
+
+
+def test_one_stream_reduces_to_window_recurrence():
+    """The arbiter with a single stream IS the PR 4 greedy window
+    recurrence — bit-exact, including quantum decomposition."""
+    rng = np.random.RandomState(7)
+    for _ in range(200):
+        K = rng.randint(1, 8)
+        avail = sorted(rng.randint(0, 30) for _ in range(K))
+        stage = [rng.randint(0, 4) for _ in range(K)]
+        comm = [rng.randint(1, 6) for _ in range(K)]
+        depth = rng.randint(1, 5)
+        legacy = cost_model.window_finish_times(avail, stage, comm, depth)
+        multi = cost_model.multi_stream_finish_times(
+            [{"avail": avail, "stage": stage, "comm": comm, "depth": depth}]
+        )[0]
+        assert multi == legacy
+        # quanta decomposition: [r] vs [1]*r commits the same finish times
+        quanta = cost_model.multi_stream_finish_times(
+            [{"avail": avail, "stage": stage, "comm": [[1] * r for r in comm],
+              "depth": depth}]
+        )[0]
+        assert quanta == legacy
+
+
+@settings(max_examples=20)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    num_streams=st.integers(min_value=2, max_value=4),
+    bound=st.integers(min_value=1, max_value=5),
+)
+def test_fairness_and_no_idle_properties(seed, num_streams, bound):
+    """Random contending graphs: no stream is passed over beyond
+    bound + S - 2, and a ready transfer never waits behind an idle link."""
+    rng = np.random.RandomState(seed)
+    demands = [
+        _rand_demand(rng, priority=rng.randint(0, 3)) for _ in range(num_streams)
+    ]
+    trace = []
+    cost_model.multi_stream_finish_times(
+        demands, starvation_bound=bound, trace=trace
+    )
+    fairness = bound + max(0, num_streams - 2)
+    for rec in trace:
+        assert rec["skips"] <= fairness, rec
+        assert rec["start"] == max(rec["link_free"], rec["min_ready"]), rec
+
+
+def test_per_link_serial_occupancy():
+    """One serial resource per link: committed quanta on the same link
+    never overlap; different links run concurrently."""
+    rng = np.random.RandomState(3)
+    demands = [
+        _rand_demand(rng, link="ici"),
+        _rand_demand(rng, link="ici"),
+        _rand_demand(rng, link="host"),
+    ]
+    trace = []
+    cost_model.multi_stream_finish_times(demands, trace=trace)
+    by_link = {}
+    for rec in trace:
+        by_link.setdefault(rec["link"], []).append((rec["start"], rec["end"]))
+    assert set(by_link) == {"ici", "host"}
+    for spans in by_link.values():
+        spans.sort()
+        for (s0, e0), (s1, _e1) in zip(spans, spans[1:]):
+            assert s1 >= e0, spans
+
+
+def test_multi_never_exceeds_naive_serialization():
+    """Arbitration reorders transfers; it never adds span."""
+    rng = np.random.RandomState(11)
+    for _ in range(50):
+        S = rng.randint(2, 5)
+        demands = [
+            _rand_demand(rng, priority=rng.randint(0, 3)) for _ in range(S)
+        ]
+        ends = cost_model.multi_stream_finish_times(demands)
+        chained = [dict(d) for d in demands]
+        for i in range(1, S):
+            chained[i]["after"] = (i - 1,)
+        naive = cost_model.multi_stream_finish_times(chained)
+        assert max(e[-1] for e in ends) <= max(e[-1] for e in naive)
+
+
+def test_strict_win_with_compute_gaps():
+    """A compute-gated stream leaves link gaps a second stream fills: the
+    arbitrated span is STRICTLY below naive serialization."""
+    gated = {"avail": [10, 20, 30], "stage": [0, 0, 0],
+             "comm": [2, 2, 2], "depth": 2, "priority": 1}
+    filler = {"avail": [0, 0, 0], "stage": [0, 0, 0],
+              "comm": [3, 3, 3], "depth": 2, "priority": 0}
+    ends = cost_model.multi_stream_finish_times([gated, filler])
+    chained = [dict(gated), dict(filler, after=(0,))]
+    naive = cost_model.multi_stream_finish_times(chained)
+    assert max(e[-1] for e in ends) < max(e[-1] for e in naive)
+
+
+def test_after_cycle_deadlock_raises():
+    d = {"avail": [0], "stage": [0], "comm": [1], "depth": 1}
+    with pytest.raises(ValueError, match="deadlock"):
+        cost_model.multi_stream_finish_times(
+            [dict(d, after=(1,)), dict(d, after=(0,))]
+        )
+
+
+def test_window_finish_times_is_the_one_stream_case():
+    """The legacy entry point now derives from the arbiter — same numbers
+    on the documented example."""
+    assert cost_model.window_finish_times([0, 0, 0], [1, 1, 1], [3, 3, 3], 2) == \
+        cost_model.multi_stream_finish_times(
+            [{"avail": [0, 0, 0], "stage": [1, 1, 1], "comm": [3, 3, 3],
+              "depth": 2}])[0]
+
+
+# ---------------------------------------------------------------------------
+# StreamGraph validation + planning
+# ---------------------------------------------------------------------------
+
+
+def _two_stream_graph(n=4, tuner=None):
+    return plan_streams(
+        [
+            StreamSpec(name="grad_sync", tree=_tree(MIX), axes=(("data", n),),
+                       op="allreduce", priority=1, compute_s=1e-3,
+                       bucket_bytes=64 << 10, reverse=True),
+            StreamSpec(name="weight_prefetch", tree=_tree(MIX),
+                       axes=(("data", n),), op="bcast", priority=0,
+                       bucket_bytes=64 << 10),
+        ],
+        tuner=tuner or Tuner(),
+    )
+
+
+def test_graph_validation_errors():
+    g = _two_stream_graph()
+    e0, e1 = g.entries
+    with pytest.raises(StreamGraphError, match="duplicate"):
+        StreamGraph((e0, dataclasses.replace(e1, name=e0.name)))
+    with pytest.raises(StreamGraphError, match="unknown"):
+        StreamGraph((e0, dataclasses.replace(e1, after=("nope",))))
+    with pytest.raises(StreamGraphError, match="after itself"):
+        StreamGraph((dataclasses.replace(e0, after=(e0.name,)), e1))
+    with pytest.raises(StreamGraphError, match="cycle"):
+        StreamGraph((
+            dataclasses.replace(e0, after=(e1.name,)),
+            dataclasses.replace(e1, after=(e0.name,)),
+        ))
+    with pytest.raises(StreamGraphError, match="starvation_bound"):
+        StreamGraph((e0,), starvation_bound=0)
+
+
+def test_fingerprint_stable_and_spec_sensitive():
+    """Same specs -> same key; any spec-level change (priority, DAG edge,
+    depth request) -> different key, BEFORE any plan resolves."""
+    g1 = _two_stream_graph()
+    g2 = _two_stream_graph()
+    assert g1.key is not None and g1.key == g2.key
+    assert g1.fingerprint() == g1.key
+
+    def variant(**kw):
+        specs = [
+            StreamSpec(name="grad_sync", tree=_tree(MIX), axes=(("data", 4),),
+                       op="allreduce", priority=1, compute_s=1e-3,
+                       bucket_bytes=64 << 10, reverse=True),
+            StreamSpec(name="weight_prefetch", tree=_tree(MIX),
+                       axes=(("data", 4),), op="bcast", priority=0,
+                       bucket_bytes=64 << 10, **kw),
+        ]
+        return plan_streams(specs, tuner=Tuner()).key
+
+    assert variant(after=("grad_sync",)) != g1.key
+    base = variant()
+    assert base == g1.key
+    assert variant(overlap_depth=3) != base
+    assert variant(link="host") != base
+
+
+def test_plan_streams_depth_and_priority_tiers():
+    """manual > tuner stream entry > empirical > analytic, and priority
+    from the tuner's stream entry when the spec leaves it None."""
+    t = Tuner()
+    spec = StreamSpec(name="s", tree=_tree(MIX), axes=(("data", 4),),
+                      bucket_bytes=64 << 10)
+    g = plan_streams([spec], tuner=t)
+    assert g.entries[0].depth_source == "analytic"
+    assert g.entries[0].priority == 0
+
+    t.record_stream("s", overlap_depth=3, priority=7)
+    g = plan_streams([spec], tuner=t)
+    assert g.entries[0].overlap_depth == 3
+    assert g.entries[0].depth_source == "stream"
+    assert g.entries[0].priority == 7
+
+    g = plan_streams([dataclasses.replace(spec, overlap_depth=5)], tuner=t)
+    assert g.entries[0].overlap_depth == 5
+    assert g.entries[0].depth_source == "manual"
+
+    t2 = Tuner()
+    for M in {max(b, 1) for b in plan_overlap(
+            _tree(MIX), [("data", 4)], tuner=Tuner(),
+            bucket_bytes=64 << 10).spec.bucket_bytes()}:
+        t2.record_overlap(M, 4, 2, op="allreduce")
+    g = plan_streams([spec], tuner=t2)
+    assert g.entries[0].overlap_depth == 2
+    assert g.entries[0].depth_source == "empirical"
+
+
+# ---------------------------------------------------------------------------
+# simulator parity + properties on planned graphs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("leaves", [MIX, [4096] * 8, [262144, 262144]])
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_one_entry_simulation_matches_simulate_overlap(leaves, n):
+    """Round-for-round parity: simulate_overlap on an OverlapPlan equals
+    simulate_streams on its 1-entry graph (it IS that call), and the span
+    equals the stream's finish round."""
+    oplan = plan_overlap(_tree(leaves), [("data", n)], tuner=Tuner(),
+                         bucket_bytes=64 << 10, compute_s=1e-3)
+    legacy = simulate_overlap(oplan)
+    sim = simulate_streams(oplan.as_graph())
+    s = sim["streams"]["overlap"]
+    assert sim["num_streams"] == 1
+    assert legacy["overlap_span_rounds"] == s["finish_round"]
+    assert legacy["comm_rounds"] == s["comm_rounds"]
+    assert legacy["idle_rounds_overlap"] == s["idle_rounds"]
+    assert sim["multi_span_rounds"] == sim["naive_span_rounds"]
+    assert sim["idle_while_ready_rounds"] == 0
+    assert sim["wire_bytes"] == legacy["wire_bytes"]
+
+
+def test_two_stream_graph_properties_and_strict_win():
+    g = _two_stream_graph(n=4)
+    sim = simulate_streams(g)
+    assert sim["multi_span_rounds"] < sim["naive_span_rounds"]
+    assert sim["max_skips"] <= g.fairness_bound()
+    assert sim["idle_while_ready_rounds"] == 0
+    assert sim["wire_bytes"] == g.wire_bytes()
+    # per-stream accounting is complete and self-consistent
+    for name in g.names:
+        s = sim["streams"][name]
+        assert s["finish_round"] <= sim["multi_span_rounds"]
+        assert s["naive_finish_round"] <= sim["naive_span_rounds"]
+
+
+def test_dispatch_schedule_interleaves_in_stream_order():
+    g = _two_stream_graph(n=4)
+    sched = dispatch_schedule(g)
+    per = {name: [] for name in g.names}
+    for name, k in sched:
+        per[name].append(k)
+    for e in g.entries:
+        assert per[e.name] == list(e.order)
+    # contention actually interleaves the two streams
+    first = {name: min(i for i, (nm, _) in enumerate(sched) if nm == name)
+             for name in g.names}
+    last = {name: max(i for i, (nm, _) in enumerate(sched) if nm == name)
+            for name in g.names}
+    assert first["weight_prefetch"] < last["grad_sync"]
+
+
+def test_faults_compose_with_streams():
+    g = _two_stream_graph(n=4)
+    spec = FaultSpec(link_slowdown=(((0, 1), 8.0),))
+    sim = simulate_streams(g, faults=spec)
+    assert sim["fault_slowdown"] >= 1.0
+    assert sim["comm_s_faulty"] >= sim["comm_s_healthy"]
+    assert sim["fault_fingerprint"] == spec.fingerprint()
+    # round structure untouched by the degraded clock
+    clean = simulate_streams(g)
+    assert sim["multi_span_rounds"] >= 1
+    assert sim["comm_rounds"] == clean["comm_rounds"]
+    with pytest.raises(DeadRankError):
+        simulate_streams(g, faults=FaultSpec(dead_ranks=(1,)))
+
+
+# ---------------------------------------------------------------------------
+# plan-cache observability (satellite: hit/miss/evict counters)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_stats_counters_and_fingerprint_invalidation():
+    plan_cache_clear()
+    base = cache_stats()
+    assert base["hits"] == base["misses"] == base["evictions"] == 0
+
+    p1 = plan_cached("bcast", 1 << 16, 4)
+    assert cache_stats()["misses"] == 1
+    p2 = plan_cached("bcast", 1 << 16, 4)
+    assert p2 is p1
+    assert cache_stats()["hits"] == 1
+
+    # every fingerprint dimension is a distinct cache point: sizes,
+    # exec_path, mesh health, and the stream-graph key
+    plan_cached("bcast", 1 << 17, 4)
+    plan_cached("bcast", 1 << 16, 4, exec_path="compiled")
+    plan_cached("bcast", 1 << 16, 4,
+                health=MeshHealth(n=4, slow_links=(((0, 1), 4.0),)))
+    plan_cached("bcast", 1 << 16, 4, stream="aaaa000011112222")
+    plan_cached("bcast", 1 << 16, 4, stream="bbbb000011112222")
+    st_now = cache_stats()
+    assert st_now["misses"] == 6
+    assert st_now["hits"] == 1
+    # ... and each repeated lookup hits its own entry
+    plan_cached("bcast", 1 << 16, 4, stream="aaaa000011112222")
+    assert cache_stats()["hits"] == 2
+
+
+def test_cache_stats_evictions_under_lru_pressure():
+    plan_cache_clear()
+    maxsize = cache_stats()["maxsize"]
+    # distinct (M, stream) points overflow the LRU: evictions are counted
+    # and the size cap holds
+    for i in range(maxsize + 40):
+        plan_cached("bcast", 1 << 12, 2, stream=f"g{i:04d}")
+    st_now = cache_stats()
+    assert st_now["evictions"] >= 40
+    assert st_now["size"] <= maxsize
+    # the evicted earliest key re-resolves as a miss, not a hit
+    before = cache_stats()["misses"]
+    plan_cached("bcast", 1 << 12, 2, stream="g0000")
+    assert cache_stats()["misses"] == before + 1
+    plan_cache_clear()
+    cleared = cache_stats()
+    assert cleared["size"] == cleared["hits"] == cleared["misses"] == \
+        cleared["evictions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# tuner stream entries (record/save/load round trip)
+# ---------------------------------------------------------------------------
+
+
+def test_record_stream_roundtrip_and_gating(tmp_path):
+    t = Tuner()
+    v0 = t._version
+    t.record_stream("grad_sync", overlap_depth=3, priority=2)
+    t.record_stream("weight_prefetch", priority=0)
+    assert t._version > v0
+    v1 = t._version
+    t.record_stream("grad_sync", overlap_depth=3, priority=2)  # idempotent
+    assert t._version == v1
+    assert t.stream_decision("grad_sync") == {"overlap_depth": 3, "priority": 2}
+    assert t.stream_decision("nope") == {}
+
+    path = tmp_path / "streams.json"
+    t.save(str(path))
+    back = Tuner.load(str(path))
+    assert back.stream_decision("grad_sync") == {"overlap_depth": 3,
+                                                 "priority": 2}
+    assert back.stream_decision("weight_prefetch") == {"priority": 0}
+
+    # dryrun-branded tables keep stream entries (they are planner
+    # decisions, not measurements) — unlike empirical crossover rows
+    t.save(str(path), dryrun=True)
+    kept = Tuner.load(str(path), allow_dryrun=True)
+    assert kept.stream_decision("grad_sync") == {"overlap_depth": 3,
+                                                 "priority": 2}
+
+    # malformed stream entries are rejected at load
+    import json
+    bad = {"table": {"stream:x": {"overlap_depth": 2, "num_chunks": 4}}}
+    (tmp_path / "bad.json").write_text(json.dumps(bad))
+    with pytest.raises(TunerTableError, match="overlap_depth/priority"):
+        Tuner.load(str(tmp_path / "bad.json"))
+    bad2 = {"table": {"stream:x": {"priority": "high"}}}
+    (tmp_path / "bad2.json").write_text(json.dumps(bad2))
+    with pytest.raises(TunerTableError, match="priority must be an int"):
+        Tuner.load(str(tmp_path / "bad2.json"))
+
+
+# ---------------------------------------------------------------------------
+# serve distribution graph (host-side shape; execution is covered on-device)
+# ---------------------------------------------------------------------------
+
+
+def test_distribution_graph_shape_single_device():
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve.engine import distribution_stream_graph
+
+    mesh = make_local_mesh(1)
+    params = {"w": jax.ShapeDtypeStruct((256, 8), np.float32)}
+    graph, spec, plans = distribution_stream_graph(
+        params, mesh, double_buffer=True, drain=True, bucket_bytes=1 << 12
+    )
+    assert graph.names == ("ckpt_drain", "distribute")
+    drain, dist = graph.entries
+    assert drain.link == "host" and drain.axes == () and drain.plans == {}
+    assert drain.priority > dist.priority
+    assert dist.after == ("ckpt_drain",)
+    assert dist.overlap_depth == 2
+    assert graph.key is not None
+    sim = simulate_streams(graph)
+    assert sim["multi_span_rounds"] <= sim["naive_span_rounds"]
+    assert sim["idle_while_ready_rounds"] == 0
+    # no drain -> single entry, depth 1 without double buffering
+    g2, _, _ = distribution_stream_graph(params, mesh, bucket_bytes=1 << 12)
+    assert g2.names == ("distribute",)
+    assert g2.entries[0].overlap_depth == 1
+    assert g2.key != graph.key
+
+
+# ---------------------------------------------------------------------------
+# on-device: backward compat + the trainer's prefetch stream
+# ---------------------------------------------------------------------------
+
+
+def test_one_entry_graph_bit_identical_to_execute_overlap(dist):
+    """Across n in {2, 4, 8} and depths: the 1-entry StreamGraph replay
+    (execute_streams AND execute_stream_entry) is bit-identical to the
+    PR 4 execute_overlap path, and matches the psum baseline."""
+    dist(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comm import execute_overlap, plan_overlap
+from repro.comm.streams import execute_stream_entry, execute_streams
+from repro.core.tuner import Tuner
+
+leaves = [65536, 4096, 4096, 512, 64]
+for n in (2, 4, 8):
+    mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    tree = {f"l{i}": jnp.asarray(rng.randn(n, e).astype(np.float32))
+            for i, e in enumerate(leaves)}
+    specs = jax.tree.map(lambda _: P("data"), tree)
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree)
+    for depth in (1, 2, 4):
+        oplan = plan_overlap(abstract, [("data", n)], tuner=Tuner(),
+                             bucket_bytes=64 << 10, overlap_depth=depth)
+        graph = oplan.as_graph()
+        def run(mode):
+            def g(t):
+                sub = jax.tree.map(lambda x: x[0], t)
+                if mode == "overlap":
+                    out = execute_overlap(oplan, sub)
+                elif mode == "entry":
+                    out = execute_stream_entry(graph.entries[0], sub)
+                else:
+                    out = execute_streams(graph, {"overlap": sub})["overlap"]
+                return jax.tree.map(lambda x: x[None], out)
+            f = jax.jit(lambda t: jax.shard_map(g, mesh=mesh, in_specs=(specs,),
+                                                out_specs=specs, check_vma=False)(t))
+            return jax.tree.map(np.asarray, f(tree))
+        a = run("overlap"); b = run("entry"); c = run("streams")
+        jax.tree.map(np.testing.assert_array_equal, a, b)
+        jax.tree.map(np.testing.assert_array_equal, a, c)
+        want = jax.tree.map(lambda x: np.asarray(x).sum(0), tree)
+        got = jax.tree.map(lambda x: x[0], a)
+        jax.tree.map(lambda g, w: np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-5),
+                     got, want)
+print("PASS")
+""",
+        devices=8,
+    )
+
+
+def test_trainer_prefetch_stream_bit_identical(dist):
+    """sync_mode='overlap_allreduce' with prefetch_stream=True produces
+    bit-identical params/opt state to the same mode without it (the
+    prefetch bcast is value-identical), and the tuner records the
+    stream entries."""
+    dist(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.model import Model
+from repro.optim.optimizers import get_optimizer
+from repro.core.tuner import Tuner
+from repro.train.train_step import make_overlap_allreduce_train_step
+
+cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64, num_heads=2,
+                  num_kv_heads=2, d_ff=128, vocab_size=128, dtype="float32")
+model = Model(cfg)
+mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+opt = get_optimizer("adamw")
+params = model.init(jax.random.PRNGKey(0))
+opt_state = opt.init(params)
+lr_fn = lambda s: 1e-3
+tuner = Tuner()
+kw = dict(sync_mode="overlap_allreduce", bcast_bucket_bytes=1 << 14)
+step_p = make_overlap_allreduce_train_step(
+    model, RunConfig(prefetch_stream=True, **kw), opt, lr_fn, mesh, tuner=tuner)
+step_0 = make_overlap_allreduce_train_step(
+    model, RunConfig(prefetch_stream=False, **kw), opt, lr_fn, mesh)
+assert tuner.stream_decision("grad_sync")["priority"] == 1
+assert tuner.stream_decision("weight_prefetch")["priority"] == 0
+rng = np.random.RandomState(0)
+tok = jnp.asarray(rng.randint(0, 128, size=(8, 16)).astype(np.int32))
+batch = {"tokens": tok, "labels": tok}
+with mesh:
+    p1, o1, out1 = jax.jit(step_p)(params, opt_state, batch)
+    p0, o0, out0 = jax.jit(step_0)(params, opt_state, batch)
+jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+             p1, p0)
+jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+             o1, o0)
+assert float(out1["loss"]) == float(out0["loss"])
+print("PASS")
+""",
+        devices=4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the committed artifact stays valid
+# ---------------------------------------------------------------------------
+
+
+def test_committed_streams_table_loads():
+    from repro.comm.tables import load_streams_table
+
+    table = load_streams_table("experiments/streams_table.json")
+    assert any(k.startswith("sync_prefetch/") for k in table)
+    assert any(k.startswith("distribute_drain/") for k in table)
+    assert any(len(e["streams"]) == 1 for e in table.values())
