@@ -1,7 +1,13 @@
 """Fig. 1 analogue — intra-pod broadcast latency vs message size, for 2/4/8/16
 ranks: the tuned library (MV2-GDR-Opt analogue) vs the XLA one-shot
 collectives (NCCL stand-in). Measured on simulated host devices + modelled
-for TPU v5e."""
+for TPU v5e.
+
+Like ``bench_internode``, the measured sweep drives the ``repro.comm`` plan
+layer end to end: the worker broadcasts through ``comm.pbcast`` (per-point
+``CollectivePlan``s resolved via ``plan_cached``) and reports the wire bytes
+of the plans it actually executed; this process re-plans the same points and
+asserts the accounting agrees exactly."""
 from __future__ import annotations
 
 import json
@@ -9,23 +15,31 @@ import json
 from repro.core import cost_model as cm
 from repro.core.tuner import Tuner
 
-from .common import MEASURE_SNIPPET, run_worker
+from .common import run_worker
 
 SIZES = [1 << 10, 16 << 10, 256 << 10, 4 << 20, 32 << 20]
 RANKS = [2, 4, 8, 16]
 
 
 def _dryrun_point(M: int, n: int, tuner: Tuner) -> dict:
-    """Simulator-clock stand-ins for the worker measurements (CI smoke)."""
-    from repro.comm import plan_collective
+    """Simulator-clock stand-ins for the worker measurements (CI smoke).
+
+    The one-shot baselines get DISTINCT cost paths: the psum-based bcast
+    reduces and rebroadcasts the full buffer (ring-allreduce traffic
+    pattern), while the allgather-based bcast gathers an n-rank stack of
+    the masked buffer (ring-allgather over the n*M gathered payload) —
+    pricing both as ``nccl_ring`` made the baseline columns identical and
+    hid the allgather baseline's n-fold payload blowup."""
+    from repro.comm import plan_cached
 
     dec = tuner.select(M, n)
-    plan = plan_collective("bcast", M, n)
+    plan = plan_cached("bcast", M, n)
     return {
         "tuned": plan.timed_rounds_s(),
         "tuned_algo": dec.algo,
-        "xla_psum": cm.cost("nccl_ring", M, n),
-        "xla_allgather": cm.cost("nccl_ring", M, n),
+        "wire_bytes": plan.wire_bytes(),
+        "xla_psum": cm.cost("ring_allreduce", M, n),
+        "xla_allgather": cm.cost("ring_allgather", n * M, n),
     }
 
 
@@ -39,20 +53,55 @@ def rows(quick: bool = False, dryrun: bool = False):
             res = {str(M): _dryrun_point(M, n, tuner) for M in sizes}
             out.extend(_emit(res, n, tuner))
             continue
-        worker = MEASURE_SNIPPET + f"""
-res = {{}}
-for M in {sizes}:
-    from repro.core.tuner import Tuner
-    dec = Tuner().select(M, {n})
-    res[str(M)] = {{
-        "tuned": measure(dec.algo, M, {n}),
-        "tuned_algo": dec.algo,
-        "xla_psum": measure("xla_psum", M, {n}),
-        "xla_allgather": measure("xla_allgather", M, {n}),
-    }}
+        worker = """
+import time, json
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comm import pbcast
+from repro.comm.plan import plan_cached
+
+n = %d
+mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+
+def measure(M, algo, reps=5):
+    elems = max(M // 4, 1)
+    xs = jnp.asarray(np.random.RandomState(0).randn(n, elems).astype(np.float32))
+    @jax.jit
+    def run(xs):
+        f = lambda b: pbcast(b[0], "data", root=0, algo=algo)[None]
+        return jax.shard_map(f, mesh=mesh, in_specs=(P("data"),),
+                             out_specs=P("data"), check_vma=False)(xs)
+    run(xs).block_until_ready()   # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter(); run(xs).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+res = {}
+for M in %s:
+    plan = plan_cached("bcast", M, n)
+    res[str(M)] = {
+        "tuned": measure(M, "auto"),
+        "tuned_algo": plan.decision.algo,
+        "wire_bytes": plan.wire_bytes(),
+        "xla_psum": measure(M, "xla_psum"),
+        "xla_allgather": measure(M, "xla_allgather"),
+    }
 print(json.dumps(res))
-"""
+""" % (n, sizes)
         res = run_worker(worker, devices=n)
+        # planned-vs-measured wire bytes: the worker's executed plans must
+        # account exactly the bytes this process plans for the same points
+        from repro.comm import plan_cached
+
+        for M_str, r in res.items():
+            planned = plan_cached("bcast", int(M_str), n).wire_bytes()
+            if planned != r["wire_bytes"]:
+                raise AssertionError(
+                    f"wire-byte accounting drifted at n={n} M={M_str}: planned "
+                    f"{planned} vs worker-executed {r['wire_bytes']}"
+                )
         out.extend(_emit(res, n, tuner))
     return out
 
@@ -75,6 +124,7 @@ def _emit(res: dict, n: int, tuner: Tuner) -> list:
                     # they validate round-count scaling, not bandwidth.
                     "xla_psum_us": r["xla_psum"] * 1e6,
                     "xla_allgather_us": r["xla_allgather"] * 1e6,
+                    "wire_bytes": r["wire_bytes"],
                     "tpu_model_tuned_us": model_tuned * 1e6,
                     "tpu_model_nccl_ring_us": model_nccl * 1e6,
                     "tpu_model_speedup_vs_nccl": model_nccl / max(model_tuned, 1e-12),

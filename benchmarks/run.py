@@ -11,6 +11,7 @@
   ragged: allgatherv/alltoallv skew-regime sweep        (comm ragged ops)
   faults: fault-injection contract sweep                (comm.faults)
   streams: multi-stream link scheduler, arbitrated vs naive (comm.streams)
+  compress: compressed-wire formats, bytes vs wall-clock   (comm.compress)
 
 Prints ``name,us_per_call,derived`` CSV; also writes experiments/bench.json
 (and the tuner/allreduce suites their experiments/*_table.json artifacts —
@@ -40,6 +41,7 @@ def main() -> None:
     from . import (
         bench_allreduce,
         bench_compile,
+        bench_compress,
         bench_faults,
         bench_inkernel,
         bench_internode,
@@ -60,6 +62,7 @@ def main() -> None:
         "ragged": bench_ragged.rows,
         "faults": bench_faults.rows,
         "streams": bench_streams.rows,
+        "compress": bench_compress.rows,
         "fig1": bench_intranode.rows,
         "fig2": bench_internode.rows,
         "fig3": bench_vgg_cntk.rows,

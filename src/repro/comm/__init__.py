@@ -20,7 +20,14 @@ Consumers: ``train.train_step`` (sync_mode='tuned_allreduce'),
 ``serve.engine.distribute_weights``, ``launch.hillclimb_bcast``,
 ``benchmarks/``. ``core.bcast`` remains as a thin compatibility facade.
 """
-from ..core.tuner import OPS, Decision, Tuner, default_tuner
+from ..core.tuner import OPS, Decision, OnlineTuner, Tuner, default_tuner
+from .compress import (
+    CompressedWire,
+    CompressionState,
+    WireFormat,
+    normalize_wire_format,
+    wire_chunk_bytes,
+)
 from .api import (
     apply_plan,
     apply_plan_resilient,
@@ -80,6 +87,7 @@ from .tables import (
     TableSchemaError,
     load_bench,
     load_compile_table,
+    load_compress_table,
     load_fault_table,
     load_inkernel_table,
     load_overlap_table,
@@ -92,7 +100,13 @@ __all__ = [
     "OPS",
     "Decision",
     "Tuner",
+    "OnlineTuner",
     "default_tuner",
+    "WireFormat",
+    "CompressedWire",
+    "CompressionState",
+    "normalize_wire_format",
+    "wire_chunk_bytes",
     "CollectivePlan",
     "plan_collective",
     "plan_degraded",
@@ -140,6 +154,7 @@ __all__ = [
     "load_compile_table",
     "load_fault_table",
     "load_inkernel_table",
+    "load_compress_table",
     "tuner_from_table",
     "FaultError",
     "DeadRankError",

@@ -18,8 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+import functools
+
 from ..core import algorithms, bucketing
 from ..core.tuner import Tuner
+from .compress import CompressedWire, normalize_wire_format
 from .executors import execute_collective, execute_compiled, execute_inkernel
 from .plan import ONE_SHOT, CollectivePlan, plan_cached
 from .schedules import alltoallv_matrix
@@ -93,12 +96,25 @@ def _resolve_exec_path(
     ``inkernel=False`` vetoes a tuned 'inkernel' without disturbing a tuned
     'compiled'/'unrolled'; an explicit ``compiled=`` bypasses the tuned tier
     entirely (it is a stronger, caller-level pin).
+
+    Compressed wire formats veto the in-kernel path: the persistent kernel
+    moves raw buffer blocks and has no quantize seam, so an explicit
+    ``inkernel=True`` on a compressed plan raises, and a tuned 'inkernel'
+    entry silently falls through to the compiled/unrolled policy (a stale
+    table row must not disable compression).
     """
+    compressed = plan.wire_format.compressed
     if inkernel:
+        if compressed:
+            raise ValueError(
+                "the in-kernel executor does not support compressed wire "
+                f"formats (plan wire_format={plan.wire_format.value!r}); "
+                "use the compiled or unrolled executor"
+            )
         return "inkernel"
     if compiled is None and fused:
         tuned = plan.decision.exec_path
-        if tuned == "inkernel" and inkernel is None:
+        if tuned == "inkernel" and inkernel is None and not compressed:
             return "inkernel"
         if tuned in ("compiled", "unrolled"):
             return tuned
@@ -320,29 +336,39 @@ def apply_plan(
             return algorithms.xla_allgather_bcast(x, axis_name, root=plan.root)
         return lax.all_gather(x, axis_name, axis=0)
     sched = plan.schedule
-    run = _EXECUTORS[
-        _resolve_exec_path(plan, fused=fused, compiled=compiled, inkernel=inkernel)
-    ]
+    path = _resolve_exec_path(plan, fused=fused, compiled=compiled, inkernel=inkernel)
+    run = _EXECUTORS[path]
+    out_dtype = x.dtype
+    if plan.wire_format.compressed:
+        # the inkernel path is vetoed above; both remaining executors take
+        # the wire seam. The communicated buffer is cast to f32 so the wire
+        # accounting (4 bytes/elem full precision vs 1 byte + amortized
+        # scale compressed) matches what actually crosses each hop; the
+        # result comes back in the caller's dtype.
+        run = functools.partial(run, wire=CompressedWire(plan.wire_format))
+        x = x.astype(jnp.float32)
     if plan.op == "allgatherv":
-        return _run_allgatherv(plan, x, axis_name, run)
+        return _run_allgatherv(plan, x, axis_name, run).astype(out_dtype)
     if plan.op == "alltoallv":
         return _run_alltoallv(plan, x, axis_name, run,
-                              in_padded=False, out_padded=False)
+                              in_padded=False, out_padded=False).astype(out_dtype)
     if plan.op == "allgather":
         flat = jnp.ravel(x)
         buf = jnp.zeros((plan.n, flat.size), flat.dtype)
         buf = lax.dynamic_update_slice(buf, flat[None], (lax.axis_index(axis_name), 0))
         out = run(sched, buf, axis_name)
-        return out.reshape((plan.n,) + x.shape)
+        return out.reshape((plan.n,) + x.shape).astype(out_dtype)
     if plan.op == "reduce_scatter":
         buf, _pad = _chunked(jnp.ravel(x), plan.n, combiner="sum")
         out = run(sched, buf, axis_name)
-        return lax.dynamic_slice(out, (lax.axis_index(axis_name), 0), (1, buf.shape[1]))[0]
+        return lax.dynamic_slice(
+            out, (lax.axis_index(axis_name), 0), (1, buf.shape[1])
+        )[0].astype(out_dtype)
     flat, _M = _flat(x)
     combiner = "sum" if plan.op in ("reduce", "allreduce") else None
     buf, pad = _chunked(flat, sched.num_chunks, combiner=combiner)
     out = run(sched, buf, axis_name)
-    return _unchunked(out, pad, x.shape, x.dtype)
+    return _unchunked(out, pad, x.shape, out_dtype)
 
 
 def _one_shot_fallback(plan: CollectivePlan, x: jax.Array, axis_name) -> jax.Array:
@@ -458,22 +484,35 @@ def pbcast(
     fused: bool = True,
     compiled: bool | None = None,
     inkernel: bool | None = None,
+    wire_format: str | None = None,
 ) -> jax.Array:
     """Broadcast ``x`` from ``root`` over the named mesh axis (must be called
     inside ``shard_map``; every rank passes a same-shape buffer and receives
-    the root's)."""
+    the root's).
+
+    ``wire_format`` ('bf16'|'fp8'|'int8', default full-precision passthrough)
+    compresses every hop at the ppermute seam; compressed payloads travel in
+    the f32 wire domain (``M`` counts 4 bytes/element before compression) and
+    the result comes back in ``x``'s dtype.
+    """
     x = jnp.asarray(x)
     n = lax.axis_size(axis_name)
     if n == 1:
         return x
-    if algo == "xla_psum":
-        return algorithms.xla_psum_bcast(x, axis_name, root=root)
-    if algo == "xla_allgather":
+    fmt = normalize_wire_format(wire_format)
+    if algo in ("xla_psum", "xla_allgather"):
+        if fmt.compressed:
+            raise ValueError(
+                f"wire_format={fmt.value!r} requires a schedule-backed algo; "
+                f"the one-shot {algo!r} has no compression seam"
+            )
+        if algo == "xla_psum":
+            return algorithms.xla_psum_bcast(x, axis_name, root=root)
         return algorithms.xla_allgather_bcast(x, axis_name, root=root)
-    _flat_x, M = _flat(x)
+    _flat_x, M = _flat(x.astype(jnp.float32) if fmt.compressed else x)
     plan = plan_cached(
         "bcast", M, n, root=root, algo=algo, num_chunks=num_chunks,
-        tuner=tuner, inter_pod=inter_pod,
+        tuner=tuner, inter_pod=inter_pod, wire_format=wire_format,
     )
     return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled,
                       inkernel=inkernel)
@@ -491,6 +530,7 @@ def preduce(
     combiner: str = "sum",
     compiled: bool | None = None,
     inkernel: bool | None = None,
+    wire_format: str | None = None,
 ) -> jax.Array:
     """Reduce-to-root (``combiner``: sum by default). Non-root ranks return
     garbage partial sums by design (MPI_Reduce semantics) — only the root's
@@ -503,14 +543,20 @@ def preduce(
     n = lax.axis_size(axis_name)
     if n == 1:
         return x
+    fmt = normalize_wire_format(wire_format)
     if combiner != "sum":
+        if fmt.compressed:
+            raise ValueError(
+                f"wire_format={fmt.value!r} supports the 'sum' combiner only "
+                f"(non-sum combiners route through the XLA one-shots)"
+            )
         if algo != "auto":
             raise ValueError(f"combiner {combiner!r} supports algo='auto' only")
         return _ONE_SHOT_REDUCERS[combiner](x, axis_name)
-    _flat_x, M = _flat(x)
+    _flat_x, M = _flat(x.astype(jnp.float32) if fmt.compressed else x)
     plan = plan_cached(
         "reduce", M, n, root=root, algo=algo, num_chunks=num_chunks,
-        tuner=tuner, inter_pod=inter_pod,
+        tuner=tuner, inter_pod=inter_pod, wire_format=wire_format,
     )
     return apply_plan(plan, x, axis_name, compiled=compiled, inkernel=inkernel)
 
@@ -532,6 +578,7 @@ def pallreduce(
     combiner: str = "sum",
     compiled: bool | None = None,
     inkernel: bool | None = None,
+    wire_format: str | None = None,
 ) -> jax.Array:
     """All-reduce (``combiner``: sum by default) over the named axis through
     the tuned plan layer.
@@ -539,24 +586,38 @@ def pallreduce(
     ``algo``: 'auto', 'reduce_then_bcast', 'fused_rsb', 'ring_allreduce', or
     the one-shot baseline 'xla_psum'. Non-sum combiners (max/min) route to
     the XLA one-shots — the schedule executors combine by sum only.
+    ``wire_format`` ('bf16'|'fp8'|'int8') compresses every hop at the
+    ppermute seam (combine arithmetic stays full precision); compressed
+    payloads travel in the f32 wire domain.
     """
     _check_combiner(combiner, "pallreduce")
     x = jnp.asarray(x)
     n = lax.axis_size(axis_name)
     if n == 1:
         return x
+    fmt = normalize_wire_format(wire_format)
     if combiner != "sum":
+        if fmt.compressed:
+            raise ValueError(
+                f"wire_format={fmt.value!r} supports the 'sum' combiner only "
+                f"(non-sum combiners route through the XLA one-shots)"
+            )
         if algo not in ("auto", "xla_psum"):
             raise ValueError(
                 f"combiner {combiner!r} supports algo='auto' or 'xla_psum' only"
             )
         return _ONE_SHOT_REDUCERS[combiner](x, axis_name)
     if algo == "xla_psum":
+        if fmt.compressed:
+            raise ValueError(
+                f"wire_format={fmt.value!r} requires a schedule-backed algo; "
+                "the one-shot 'xla_psum' has no compression seam"
+            )
         return lax.psum(x, axis_name)
-    _flat_x, M = _flat(x)
+    _flat_x, M = _flat(x.astype(jnp.float32) if fmt.compressed else x)
     plan = plan_cached(
         "allreduce", M, n, algo=algo, num_chunks=num_chunks,
-        tuner=tuner, inter_pod=inter_pod,
+        tuner=tuner, inter_pod=inter_pod, wire_format=wire_format,
     )
     return apply_plan(plan, x, axis_name, fused=fused, compiled=compiled,
                       inkernel=inkernel)
@@ -571,6 +632,7 @@ def pallgather(
     inter_pod: bool = False,
     compiled: bool | None = None,
     inkernel: bool | None = None,
+    wire_format: str | None = None,
 ) -> jax.Array:
     """All-gather the per-rank shard ``x`` into a stacked ``(n, *x.shape)``
     array (the ``lax.all_gather(axis=0)`` convention).
@@ -582,11 +644,19 @@ def pallgather(
     n = lax.axis_size(axis_name)
     if n == 1:
         return x[None]
+    fmt = normalize_wire_format(wire_format)
     if algo == "xla_allgather":
+        if fmt.compressed:
+            raise ValueError(
+                f"wire_format={fmt.value!r} requires a schedule-backed algo; "
+                "the one-shot 'xla_allgather' has no compression seam"
+            )
         return lax.all_gather(x, axis_name, axis=0)
-    M = n * x.size * x.dtype.itemsize  # full gathered payload
+    # full gathered payload; compressed wires ship in the f32 wire domain
+    M = n * x.size * (4 if fmt.compressed else x.dtype.itemsize)
     plan = plan_cached(
         "allgather", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
+        wire_format=wire_format,
     )
     return apply_plan(plan, x, axis_name, compiled=compiled, inkernel=inkernel)
 
@@ -601,6 +671,7 @@ def preduce_scatter(
     combiner: str = "sum",
     compiled: bool | None = None,
     inkernel: bool | None = None,
+    wire_format: str | None = None,
 ) -> jax.Array:
     """Reduce-scatter (``combiner``: sum by default): every rank contributes
     the full flat buffer and receives its rank-indexed shard of the combined
@@ -613,15 +684,22 @@ def preduce_scatter(
     flat = jnp.ravel(x)
     if n == 1:
         return flat
+    fmt = normalize_wire_format(wire_format)
     if combiner != "sum":
+        if fmt.compressed:
+            raise ValueError(
+                f"wire_format={fmt.value!r} supports the 'sum' combiner only "
+                f"(non-sum combiners route through the XLA one-shots)"
+            )
         if algo != "auto":
             raise ValueError(f"combiner {combiner!r} supports algo='auto' only")
         full = _ONE_SHOT_REDUCERS[combiner](flat, axis_name)
         buf, _pad = _chunked(full, n)
         return lax.dynamic_slice(buf, (lax.axis_index(axis_name), 0), (1, buf.shape[1]))[0]
-    M = flat.size * flat.dtype.itemsize
+    M = flat.size * (4 if fmt.compressed else flat.dtype.itemsize)
     plan = plan_cached(
         "reduce_scatter", M, n, algo=algo, tuner=tuner, inter_pod=inter_pod,
+        wire_format=wire_format,
     )
     if plan.algo == "noop":
         return flat
@@ -807,6 +885,7 @@ def pallreduce_tree(
     stage: bool = False,
     stage_chunk: int = 64 * 1024,
     compiled: bool | None = None,
+    wire_format: str | None = None,
 ) -> Any:
     """Hierarchical bucketed all-reduce over one or more mesh axes.
 
@@ -815,6 +894,8 @@ def pallreduce_tree(
     priced with the tuner's inter-pod constants, so the pod level can pick a
     different algorithm than the fast intra-pod level. The tree is packed
     into buckets ONCE; all hierarchy levels run over the packed buffers.
+    ``wire_format`` applies to every bucket at every level (see
+    :func:`pallreduce`).
     """
     spec = bucketing.plan_buckets(tree, bucket_bytes)
     buckets = bucketing.pack_buckets(tree, spec)
@@ -830,7 +911,7 @@ def pallreduce_tree(
             b = chunked_copy(b, chunk_elems=stage_chunk)
         for ax in axes:
             b = pallreduce(b, ax, algo=algo, tuner=tuner, inter_pod=(ax in inter),
-                           compiled=compiled)
+                           compiled=compiled, wire_format=wire_format)
         out.append(b)
     return bucketing.unpack_buckets(out, spec)
 

@@ -1,0 +1,181 @@
+"""Wire formats for compressed collectives.
+
+A :class:`WireFormat` is the per-plan choice of what bytes actually cross
+the link for each chunk transfer:
+
+* ``bf16`` — passthrough. The buffer ships unmodified (named for the
+  canonical training dtype; any dtype passes through bit-identically).
+  This is the default and preserves the repo-wide contract that every
+  executor path is bit-identical to the unrolled oracle.
+* ``int8`` — symmetric per-block abs-max quantization to int8, one f32
+  scale per 256-element block.
+* ``fp8`` — same blocking to ``float8_e4m3fn`` (saturation range ±448).
+
+Compression is applied PER HOP at the executor's ``ppermute`` seam: the
+sender quantizes the outgoing block, the values and per-block scales cross
+the wire as two permutes, and the receiver dequantizes before the local
+combine — so arithmetic (reduce combines, root writes) always happens in
+full precision and only the wire payload is low-precision. Per-hop
+quantization error is what the trainer's error-feedback residual
+(:class:`CompressionState`) compensates across steps.
+
+Wire-byte accounting is physical: :func:`wire_chunk_bytes` counts the
+block-padded payload plus the scale sidecar, so
+``CollectivePlan.wire_bytes()`` and ``expected_wire_bytes`` describe the
+bytes a transport would actually move, and the compress-table gate can
+demand exact equality against measured transfers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.quantize import BLOCK_ELEMS
+
+__all__ = [
+    "WireFormat",
+    "normalize_wire_format",
+    "wire_chunk_bytes",
+    "CompressedWire",
+    "CompressionState",
+    "roundtrip",
+]
+
+# one f32 scale per BLOCK_ELEMS single-byte payload elements
+_SCALE_BYTES = 4
+_BLOCK_WIRE_BYTES = BLOCK_ELEMS + _SCALE_BYTES  # 260
+
+
+class WireFormat(str, enum.Enum):
+    """What a chunk looks like on the wire."""
+
+    BF16 = "bf16"   # passthrough, bit-identical
+    FP8 = "fp8"     # float8_e4m3fn payload + f32 block scales
+    INT8 = "int8"   # int8 payload + f32 block scales
+
+    @property
+    def compressed(self) -> bool:
+        return self is not WireFormat.BF16
+
+    @property
+    def nominal_ratio(self) -> float:
+        """Declared payload reduction vs the f32 wire domain (the scale
+        sidecar and block padding make the physical ratio slightly lower —
+        4 * 256 / 260 ≈ 3.94 for a block-aligned chunk)."""
+        return 4.0 if self.compressed else 1.0
+
+
+def normalize_wire_format(fmt) -> WireFormat:
+    """``None`` / strings / enum members -> :class:`WireFormat`."""
+    if fmt is None:
+        return WireFormat.BF16
+    try:
+        return WireFormat(fmt)
+    except ValueError:
+        raise ValueError(
+            f"unknown wire format {fmt!r}; expected one of "
+            f"{[f.value for f in WireFormat]}"
+        ) from None
+
+
+def wire_chunk_bytes(fmt, chunk_bytes: int) -> int:
+    """Physical bytes on the wire for one transfer of a ``chunk_bytes``
+    full-precision chunk under ``fmt``.
+
+    Compressed formats operate on the f32 wire domain (entry points cast to
+    f32 before chunking, so ``chunk_bytes`` is ``4 * elems`` exactly): the
+    payload is one byte per element zero-padded to the 256-element scale
+    block, plus one f32 scale per block — ``260 * ceil(elems / 256)``. The
+    padding is counted because it is genuinely transferred (the kernels
+    quantize whole blocks). ``bf16`` passthrough ships ``chunk_bytes``
+    unchanged.
+    """
+    fmt = normalize_wire_format(fmt)
+    if chunk_bytes <= 0:
+        return 0
+    if not fmt.compressed:
+        return int(chunk_bytes)
+    elems = -(-int(chunk_bytes) // 4)
+    blocks = -(-elems // BLOCK_ELEMS)
+    return blocks * _BLOCK_WIRE_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedWire:
+    """Executor hook: compress/decompress one (rows, cols) f32 block at the
+    ``ppermute`` seam. ``compress`` returns the wire arrays (payload,
+    scales); ``decompress`` inverts them back to the buffer dtype. Both are
+    trace-safe (called inside jit/shard_map)."""
+
+    fmt: WireFormat
+    interpret: bool | None = None
+
+    def compress(self, block: jax.Array) -> tuple[jax.Array, jax.Array]:
+        from ..kernels.ops import quantize_blocks
+
+        return quantize_blocks(block, self.fmt.value, interpret=self.interpret)
+
+    def decompress(self, values: jax.Array, scales: jax.Array, *,
+                   out_cols: int, dtype) -> jax.Array:
+        from ..kernels.ops import dequantize_blocks
+
+        out = dequantize_blocks(values, scales, out_cols=out_cols,
+                                interpret=self.interpret)
+        return out.astype(dtype)
+
+
+def roundtrip(x: jax.Array, fmt, *, interpret: bool | None = None) -> jax.Array:
+    """One local quantize->dequantize hop of ``x`` (any shape) under
+    ``fmt`` — the error-feedback residual's model of what one wire hop
+    loses. ``bf16`` is the identity."""
+    fmt = normalize_wire_format(fmt)
+    if not fmt.compressed or x.size == 0:
+        return x
+    from ..kernels.ops import dequantize_blocks, quantize_blocks
+
+    flat = x.reshape(1, -1).astype(jnp.float32)
+    v, s = quantize_blocks(flat, fmt.value, interpret=interpret)
+    out = dequantize_blocks(v, s, out_cols=flat.shape[1], interpret=interpret)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+class CompressionState:
+    """Error-feedback residual helpers for compressed gradient sync.
+
+    The residual tree ``e`` lives in the optimizer state (under ``"ef"``)
+    so it is donated/checkpointed with the rest of training state. Each
+    step the trainer sends the compensated gradient ``c = g + e`` through
+    the compressed collective and carries forward what one quantization
+    hop lost: ``e' = c - roundtrip(c)``. With relative quantization error
+    ``δ`` per hop the residual stays bounded (``|e| <= δ|g| / (1 - δ)``),
+    which is what keeps the compressed loss trajectory within tolerance of
+    the full-precision baseline.
+    """
+
+    @staticmethod
+    def init(params) -> dict:
+        """Zero residuals shaped like ``params`` (f32)."""
+        return jax.tree.map(
+            lambda p: jnp.zeros(jnp.shape(p), jnp.float32), params
+        )
+
+    @staticmethod
+    def compensate(grads, residual):
+        """``c = g + e`` in f32 — the gradient actually synced."""
+        return jax.tree.map(
+            lambda g, e: g.astype(jnp.float32) + e, grads, residual
+        )
+
+    @staticmethod
+    def update(compensated, fmt, *, interpret: bool | None = None):
+        """``e' = c - roundtrip(c)``: the local single-hop quantization
+        error carried into the next step."""
+        fmt = normalize_wire_format(fmt)
+        if not fmt.compressed:
+            return jax.tree.map(jnp.zeros_like, compensated)
+        return jax.tree.map(
+            lambda c: c - roundtrip(c, fmt, interpret=interpret), compensated
+        )

@@ -49,7 +49,23 @@ def _per_rank(values, axis_name):
     return jnp.asarray(values)[lax.axis_index(axis_name)]
 
 
-def _execute_lane(transfers, buf, axis_name, n):
+def _wire_permute(block, axis_name, perm, wire):
+    """Ship ``block`` across one ppermute hop under the plan's wire format:
+    passthrough (``wire is None``) permutes the full-precision block;
+    compressed formats quantize, permute the payload and the per-block
+    scales as two permutes of the SAME pattern, and dequantize back to the
+    buffer dtype on the receiving side — so the combine arithmetic that
+    follows always runs in full precision."""
+    if wire is None:
+        return lax.ppermute(block, axis_name, perm)
+    values, scales = wire.compress(block.astype(jnp.float32))
+    values = lax.ppermute(values, axis_name, perm)
+    scales = lax.ppermute(scales, axis_name, perm)
+    return wire.decompress(values, scales, out_cols=block.shape[1],
+                           dtype=block.dtype)
+
+
+def _execute_lane(transfers, buf, axis_name, n, wire=None):
     count = transfers[0].chunk_count
     combine = transfers[0].combine
     send_start = np.zeros(n, np.int32)
@@ -62,7 +78,7 @@ def _execute_lane(transfers, buf, axis_name, n):
     perm = [(t.src, t.dst) for t in transfers]
     s0 = _per_rank(send_start, axis_name)
     operand = lax.dynamic_slice(buf, (s0, 0), (count, buf.shape[1]))
-    received = lax.ppermute(operand, axis_name, perm)
+    received = _wire_permute(operand, axis_name, perm, wire)
     r0 = _per_rank(recv_start, axis_name)
     current = lax.dynamic_slice(buf, (r0, 0), (count, buf.shape[1]))
     on_dst = _per_rank(is_dst, axis_name)
@@ -75,10 +91,13 @@ def _execute_lane(transfers, buf, axis_name, n):
     return lax.dynamic_update_slice(buf, merged, (r0, 0))
 
 
-def execute_collective(schedule: Schedule, buf: jax.Array, axis_name) -> jax.Array:
+def execute_collective(schedule: Schedule, buf: jax.Array, axis_name, *,
+                       wire=None) -> jax.Array:
     """Replay any schedule over a ``(num_chunks, chunk_elems)`` buffer,
     round by round (unrolled HLO). The lane partition comes from the cached
-    host-side lowering — once per schedule, not once per trace."""
+    host-side lowering — once per schedule, not once per trace. ``wire``
+    (a :class:`repro.comm.compress.CompressedWire`) compresses every hop at
+    the ppermute seam; ``None`` is the bit-identical passthrough."""
     assert buf.ndim == 2 and buf.shape[0] == schedule.num_chunks, (
         buf.shape,
         schedule.num_chunks,
@@ -86,7 +105,7 @@ def execute_collective(schedule: Schedule, buf: jax.Array, axis_name) -> jax.Arr
     n = schedule.n
     for lanes in lower_schedule(schedule).round_lanes:
         for lane in lanes:
-            buf = _execute_lane(lane, buf, axis_name, n)
+            buf = _execute_lane(lane, buf, axis_name, n, wire)
     return buf
 
 
@@ -97,9 +116,13 @@ def execute_compiled(
     *,
     unroll: int = 1,
     interpret: bool | None = None,
+    wire=None,
 ) -> jax.Array:
     """Compiled replay: one ``lax.fori_loop`` over rounds, one ppermute +
-    one fused Pallas combine-update per lane class per iteration.
+    one fused Pallas combine-update per lane class per iteration. ``wire``
+    compresses every class's hop at the ppermute seam (fill/drain rounds
+    quantize masked garbage blocks, which is harmless — the fused kernel's
+    row mode keeps those rows).
 
     ``buf``: (num_chunks, chunk_elems). The per-round index tables ride
     along as small int32 constants indexed ``[round, rank]`` inside the
@@ -140,7 +163,7 @@ def execute_compiled(
     def body(s, b):
         for cls, send, recv, lo, hi, combine in tables:
             block = lax.dynamic_slice(b, (send[s, rank], 0), (cls.block, chunk))
-            received = lax.ppermute(block, axis_name, cls.perm)
+            received = _wire_permute(block, axis_name, cls.perm, wire)
             b = fused_combine_update(
                 b,
                 received,

@@ -16,6 +16,7 @@ from ..core import cost_model
 from ..core.schedules import ALGORITHMS, LoweredSchedule, Schedule, build, lower_schedule
 from ..core.tuner import OPS, RAGGED_OPS, Decision, Tuner, default_tuner
 from . import schedules as comm_schedules
+from .compress import WireFormat, normalize_wire_format, wire_chunk_bytes
 
 __all__ = [
     "CollectivePlan",
@@ -106,14 +107,23 @@ class CollectivePlan:
     def predicted_s(self) -> float:
         return self.decision.predicted_s
 
+    @property
+    def wire_format(self) -> WireFormat:
+        return normalize_wire_format(self.decision.wire_format)
+
     def wire_bytes(self) -> int:
         """Total bytes on the wire across all links (schedule accounting:
-        chunk-transfers x actual chunk size). One-shot baselines are priced
-        at their HLO equivalents: psum-bcast = 2M(n-1)/n-ish ring, gather =
-        n*M; noop = 0."""
+        chunk-transfers x actual per-transfer wire size, which under a
+        compressed format is the block-padded payload + scale sidecar —
+        see :func:`repro.comm.compress.wire_chunk_bytes`). One-shot
+        baselines are priced at their HLO equivalents: psum-bcast =
+        2M(n-1)/n-ish ring, gather = n*M; noop = 0. One-shots never
+        compress (``decide`` rejects the combination)."""
         if self.schedule is not None:
             chunk_bytes = math.ceil(self.M / max(self.schedule.num_chunks, 1))
-            return self.schedule.wire_chunks() * chunk_bytes
+            return self.schedule.wire_chunks() * wire_chunk_bytes(
+                self.wire_format, chunk_bytes
+            )
         if self.algo == "xla_psum":
             return 2 * self.M * (self.n - 1)  # mask + all-reduce (ring both phases)
         if self.algo == "xla_allgather":
@@ -151,6 +161,7 @@ def decide(
     inter_pod: bool = False,
     sizes=None,
     exec_path: str | None = None,
+    wire_format: str | None = None,
 ) -> Decision:
     """Resolve (op, M, n) to a Decision. ``algo='auto'`` consults the tuner;
     a manual algo gets analytic chunking AND an analytic ``predicted_s`` (so
@@ -158,13 +169,30 @@ def decide(
     returned NaN here). Ragged ops take their row-count vector via
     ``sizes`` (see :meth:`Tuner.select`). An explicit ``exec_path``
     ('inkernel'|'compiled'|'unrolled') pins the executor tier on the
-    Decision, overriding whatever the tuner's table carries."""
+    Decision, overriding whatever the tuner's table carries; an explicit
+    ``wire_format`` ('bf16'|'fp8'|'int8') likewise pins what the chunks
+    look like on the wire. Compressed formats are scoped to the dense
+    schedule-based ops — ragged ops and the XLA one-shots (whose transfers
+    we don't own) reject them."""
     if op not in OPS:
         raise ValueError(f"unknown collective op {op!r}; have {OPS}")
     if exec_path is not None and exec_path not in ("inkernel", "compiled", "unrolled"):
         raise ValueError(
             f"exec_path must be 'inkernel'|'compiled'|'unrolled', got {exec_path!r}"
         )
+    fmt = normalize_wire_format(wire_format)
+    if fmt.compressed:
+        if op in RAGGED_OPS:
+            raise ValueError(
+                f"compressed wire format {fmt.value!r} is not supported for "
+                f"ragged op {op!r} (per-rank chunk sizes break the uniform "
+                "block accounting)"
+            )
+        if algo in ONE_SHOT:
+            raise ValueError(
+                f"one-shot {algo!r} lowers to a native XLA collective — its "
+                f"transfers cannot carry wire format {fmt.value!r}"
+            )
     if algo in ONE_SHOT and op not in _ONE_SHOT_OPS[algo]:
         raise ValueError(
             f"one-shot {algo!r} cannot implement op {op!r} (valid for {_ONE_SHOT_OPS[algo]})"
@@ -177,6 +205,13 @@ def decide(
         dec = t.select(M, n, op=op, inter_pod=inter_pod, sizes=sizes)
         if exec_path is not None and dec.algo != "noop":
             dec = dataclasses.replace(dec, exec_path=exec_path)
+        if wire_format is not None and dec.algo != "noop":
+            if fmt.compressed and dec.algo in ONE_SHOT:
+                raise ValueError(
+                    f"tuner selected one-shot {dec.algo!r} which cannot carry "
+                    f"wire format {fmt.value!r}; pin a schedule-based algo"
+                )
+            dec = dataclasses.replace(dec, wire_format=fmt.value)
         return dec
     B = t.hw.path_bw(inter_pod)
     if num_chunks is None:
@@ -212,7 +247,8 @@ def decide(
     else:
         predicted = float("nan")  # one-shot baselines have no Eq. 1-6 model
     return Decision(algo, num_chunks, chunk, predicted, "manual",
-                    exec_path=exec_path)
+                    exec_path=exec_path,
+                    wire_format=None if wire_format is None else fmt.value)
 
 
 def plan_collective(
@@ -227,11 +263,13 @@ def plan_collective(
     inter_pod: bool = False,
     sizes=None,
     exec_path: str | None = None,
+    wire_format: str | None = None,
 ) -> CollectivePlan:
     """Decide + build the executable schedule for one collective."""
     sizes = _norm_sizes(op, sizes, n)
     dec = decide(op, M, n, algo=algo, num_chunks=num_chunks, tuner=tuner,
-                 inter_pod=inter_pod, sizes=sizes, exec_path=exec_path)
+                 inter_pod=inter_pod, sizes=sizes, exec_path=exec_path,
+                 wire_format=wire_format)
     t = tuner or default_tuner()
     if dec.algo == "noop" or dec.algo in ONE_SHOT:
         return CollectivePlan(op, M, n, root, inter_pod, dec, None, sizes)
@@ -301,6 +339,7 @@ def plan_degraded(
     inter_pod: bool = False,
     sizes=None,
     exec_path: str | None = None,
+    wire_format: str | None = None,
 ) -> CollectivePlan:
     """Replan one collective for a degraded mesh (:class:`comm.faults.MeshHealth`).
 
@@ -324,7 +363,7 @@ def plan_degraded(
     if health.healthy:
         return plan_collective(op, M, n, root=root, algo=algo, num_chunks=num_chunks,
                                tuner=tuner, inter_pod=inter_pod, sizes=sizes,
-                               exec_path=exec_path)
+                               exec_path=exec_path, wire_format=wire_format)
     t = tuner or default_tuner()
     sizes = _norm_sizes(op, sizes, n)
     survivors = health.survivors()
@@ -333,7 +372,7 @@ def plan_degraded(
         # slow links only: same mesh, same schedule, degraded pricing
         plan = plan_collective(op, M, n, root=root, algo=algo, num_chunks=num_chunks,
                                tuner=t, inter_pod=inter_pod, sizes=sizes,
-                               exec_path=exec_path)
+                               exec_path=exec_path, wire_format=wire_format)
         dec = _reprice_degraded(plan.decision, op, M, n, t, inter_pod, sizes, slow)
         return dataclasses.replace(plan, decision=dec)
     if len(survivors) == 0:
@@ -364,7 +403,7 @@ def plan_degraded(
     slow2 = tuple(((pos[s], pos[d]), f) for (s, d), f in slow)
     plan = plan_collective(op, M2, n2, root=new_root, algo=algo, num_chunks=num_chunks,
                            tuner=t, inter_pod=inter_pod, sizes=sizes2,
-                           exec_path=exec_path)
+                           exec_path=exec_path, wire_format=wire_format)
     dec = _reprice_degraded(plan.decision, op, M2, n2, t, inter_pod, plan.sizes, slow2)
     return dataclasses.replace(plan, decision=dec, survivors=survivors)
 
@@ -399,10 +438,12 @@ def plan_cached(
     health=None,
     exec_path: str | None = None,
     stream: str | None = None,
+    wire_format: str | None = None,
 ) -> CollectivePlan:
     """LRU-cached :func:`plan_collective`. Key: (op, M, n, root, algo,
-    num_chunks, inter_pod, sizes vector, exec_path, stream-graph
-    fingerprint, tuner fingerprint, health fingerprint). The buffer dtype
+    num_chunks, inter_pod, sizes vector, exec_path, wire_format,
+    stream-graph fingerprint, tuner fingerprint, health fingerprint). The
+    buffer dtype
     is already folded into ``M`` (a byte count), so same-point calls from
     different dtypes correctly share one plan; ragged plans for different
     size vectors never collide (the canonical flat vector is in the key).
@@ -438,6 +479,7 @@ def plan_cached(
         bool(inter_pod),
         sizes,
         exec_path,
+        None if wire_format is None else normalize_wire_format(wire_format).value,
         None if stream is None else str(stream),
         t.fingerprint(),
         None if health is None else health.fingerprint(),
@@ -452,11 +494,13 @@ def plan_cached(
         plan = plan_degraded(
             op, M, n, health, root=root, algo=algo, num_chunks=num_chunks,
             tuner=t, inter_pod=inter_pod, sizes=sizes, exec_path=exec_path,
+            wire_format=wire_format,
         )
     else:
         plan = plan_collective(
             op, M, n, root=root, algo=algo, num_chunks=num_chunks, tuner=t,
             inter_pod=inter_pod, sizes=sizes, exec_path=exec_path,
+            wire_format=wire_format,
         )
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
@@ -482,14 +526,27 @@ def plan_cache_clear() -> None:
 
 
 def expected_wire_bytes(op: str, algo: str, M: int, n: int, num_chunks: int = 1,
-                        sizes=None) -> float:
+                        sizes=None, wire_format: str | None = None) -> float:
     """Closed-form bytes-on-wire accounting the property tests check the
     schedule-level accounting (``CollectivePlan.wire_bytes``) against.
     Ragged algos need the row-count vector: wire bytes depend on WHICH ranks
-    (blocks) hold the rows, not just the total."""
+    (blocks) hold the rows, not just the total.
+
+    ``wire_format`` applies :func:`repro.comm.compress.wire_chunk_bytes`
+    to every dense transfer: each closed form below is (transfer count) x
+    (per-transfer bytes), and compression acts on the per-transfer chunk —
+    so the compress-table gate can demand EXACT equality between this form
+    and the measured plan accounting. Ragged algos reject compressed
+    formats (same scope rule as :func:`decide`)."""
+    fmt = normalize_wire_format(wire_format)
     if n <= 1 or algo == "noop":
         return 0.0
     if algo in _RAGGED_ALGOS:
+        if fmt.compressed:
+            raise ValueError(
+                f"compressed wire format {fmt.value!r} is not supported for "
+                f"ragged algo {algo!r}"
+            )
         sizes = _norm_sizes(op, sizes, n) if sizes is not None else None
         if sizes is None or sum(sizes) == 0:
             return 0.0
@@ -517,20 +574,25 @@ def expected_wire_bytes(op: str, algo: str, M: int, n: int, num_chunks: int = 1,
             return sum(
                 m[s][d] * ((d - s) % n) for s in range(n) for d in range(n)
             ) * row
+    # every dense form is (transfer count) x (per-transfer chunk bytes);
+    # the wire format transforms the per-transfer size, never the count
     chunk = math.ceil(M / max(1, num_chunks))
+    share = math.ceil(M / n)
     if algo == "scatter_allgather":
         # (n/2)*log2(n) scatter chunk-sends + n*(n-1) ring chunk-sends
-        return ((n // 2) * int(math.log2(n)) + n * (n - 1)) * math.ceil(M / n)
-    if algo in ("ring_allgather", "ring_reduce_scatter"):
-        return n * (n - 1) * math.ceil(M / n)
-    if algo == "doubling_allgather":
-        return n * (n - 1) * math.ceil(M / n)  # sum_t n * 2^t = n (n - 1)
-    if algo == "ring_allreduce":
-        return 2 * n * (n - 1) * math.ceil(M / n)
-    if algo == "fused_rsb":
-        return 2 * (n - 1) * num_chunks * chunk
-    if algo == "reduce_then_bcast":
+        count, per = (n // 2) * int(math.log2(n)) + n * (n - 1), share
+    elif algo in ("ring_allgather", "ring_reduce_scatter"):
+        count, per = n * (n - 1), share
+    elif algo == "doubling_allgather":
+        count, per = n * (n - 1), share  # sum_t n * 2^t = n (n - 1)
+    elif algo == "ring_allreduce":
+        count, per = 2 * n * (n - 1), share
+    elif algo == "fused_rsb":
+        count, per = 2 * (n - 1) * num_chunks, chunk
+    elif algo == "reduce_then_bcast":
         raise ValueError("composite: account the two phases separately")
-    # every tree/chain bcast (and its reduce mirror) moves the full message
-    # over exactly n-1 edges
-    return (n - 1) * num_chunks * chunk
+    else:
+        # every tree/chain bcast (and its reduce mirror) moves the full
+        # message over exactly n-1 edges
+        count, per = (n - 1) * num_chunks, chunk
+    return count * wire_chunk_bytes(fmt, per)

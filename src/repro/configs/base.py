@@ -268,6 +268,14 @@ class RunConfig:
     # is value-identical — it pre-stages next step's weights on the wire
     # schedule without changing any result bit.
     prefetch_stream: bool = False
+    # wire format for sync_mode='compressed_allreduce' ('bf16'|'fp8'|'int8'):
+    # gradients cross every hop quantized to 1 byte/element + per-256-block
+    # f32 scales; the error-feedback residual (carried in opt_state['ef'])
+    # re-injects each step's quantization error into the next step's
+    # gradient, so the compressed run tracks the full-precision trajectory.
+    # 'bf16' is the full-precision passthrough (bit-identical to
+    # tuned_allreduce).
+    wire_format: str = "bf16"
     bcast_bucket_bytes: int = 4 << 20
     num_microbatches: int = 1
     remat: bool = True

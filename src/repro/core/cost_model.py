@@ -24,6 +24,11 @@ __all__ = [
     "calibrate_t_launch",
     "t_exec_path",
     "cost",
+    "cost_wire",
+    "LinkClass",
+    "calibrate_link_classes",
+    "cost_link_class",
+    "WIRE_PAYLOAD_FRACTION",
     "optimal_chunk_bytes",
     "optimal_chunk_bytes_fused",
     "t_overlapped",
@@ -746,3 +751,120 @@ def cost_degraded(
     algorithms for a reason."""
     B = degraded_bandwidth(hw.path_bw(inter_pod), slow_links)
     return ALGO_COSTS[algo](M, n, hw, B, **kw)
+
+
+# ---------------------------------------------------------------------------
+# compressed wire formats: bytes-vs-precision pricing
+# ---------------------------------------------------------------------------
+
+# wire payload per full-precision byte (f32 wire domain): compressed
+# formats ship one byte per 4-byte element plus one f32 scale per
+# 256-element block — 260 wire bytes per 1024 payload bytes (the physical
+# form in repro.comm.compress.wire_chunk_bytes, before the block-padding
+# ceil that only matters for ragged chunk tails)
+WIRE_PAYLOAD_FRACTION = {
+    "bf16": 1.0,
+    "fp8": 260.0 / 1024.0,
+    "int8": 260.0 / 1024.0,
+}
+
+# HBM passes each compressed hop adds on top of the transfer itself: the
+# sender reads the block and writes the payload, the receiver reads the
+# payload and writes the block back — ~2 full-size passes per hop, charged
+# once against the whole message (hops pipeline the way transfers do)
+_QUANTIZE_HBM_PASSES = 2.0
+
+
+def cost_wire(
+    algo: str,
+    M: float,
+    n: int,
+    hw: Hardware = TPU_V5E,
+    *,
+    wire_format: str | None = None,
+    inter_pod: bool = False,
+    **kw,
+) -> float:
+    """:func:`cost` under a wire format: the closed form evaluated at the
+    format's wire payload (bandwidth terms shrink by the compression
+    fraction; startup/round terms are unchanged) plus the quantize/
+    dequantize HBM toll. ``bf16``/``None`` is exactly ``cost``. This is
+    the bytes-vs-precision trade the :class:`~repro.core.tuner.OnlineTuner`
+    prices when it explores formats: compression wins where the bandwidth
+    term dominates (large M) and loses to the HBM toll at small M."""
+    fmt = wire_format or "bf16"
+    if fmt not in WIRE_PAYLOAD_FRACTION:
+        raise ValueError(
+            f"unknown wire format {fmt!r}; have {sorted(WIRE_PAYLOAD_FRACTION)}"
+        )
+    frac = WIRE_PAYLOAD_FRACTION[fmt]
+    if "C" in kw:
+        kw = dict(kw, C=max(kw["C"] * frac, 1.0))
+    t = ALGO_COSTS[algo](M * frac, n, hw, hw.path_bw(inter_pod), **kw)
+    if frac < 1.0:
+        t += _QUANTIZE_HBM_PASSES * M / hw.hbm_bw
+    return t
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkClass:
+    """One calibrated link class: a (bandwidth, startup) pair for a set of
+    physically-alike links. Asymmetric and multi-rail topologies are just
+    distinct class names ('ici', 'host', 'rail0:up', 'rail0:down', ...) —
+    per-direction links calibrate to different constants and price
+    differently, nothing else is needed."""
+
+    name: str
+    bw: float  # bytes/s
+    ts: float  # per-transfer startup (s)
+
+
+def calibrate_link_classes(
+    samples: dict[str, Sequence[tuple[float, float]]]
+) -> dict[str, "LinkClass"]:
+    """Fit per-class link constants from measured point-to-point transfers.
+
+    ``samples[name]`` is a list of ``(bytes, seconds)`` pairs for one link
+    class. Each class gets the least-squares line ``t = ts + bytes / bw``
+    (the same slope fit :func:`calibrate_t_launch` uses per compile-table
+    group): the slope is ``1/bw``, the intercept the startup. Needs >= 2
+    distinct sizes per class and a positive slope — a flat or negative fit
+    means the samples can't identify a bandwidth and raises instead of
+    returning a nonsense constant.
+    """
+    classes: dict[str, LinkClass] = {}
+    for name, pts in samples.items():
+        pts = [(float(b), float(t)) for b, t in pts]
+        if len(pts) < 2 or len({b for b, _ in pts}) < 2:
+            raise ValueError(
+                f"link class {name!r}: need >= 2 samples at distinct sizes "
+                f"to fit (bw, ts), got {pts}"
+            )
+        xs, ys = zip(*pts)
+        mx, my = sum(xs) / len(xs), sum(ys) / len(ys)
+        den = sum((x - mx) ** 2 for x in xs)
+        slope = sum((x - mx) * (y - my) for x, y in pts) / den
+        if slope <= 0:
+            raise ValueError(
+                f"link class {name!r}: non-positive transfer-time slope "
+                f"({slope:.3e} s/byte) — samples cannot identify a bandwidth"
+            )
+        classes[name] = LinkClass(name, bw=1.0 / slope,
+                                  ts=max(my - slope * mx, 0.0))
+    return classes
+
+
+def cost_link_class(
+    algo: str,
+    M: float,
+    n: int,
+    link: "LinkClass",
+    hw: Hardware = TPU_V5E,
+    **kw,
+) -> float:
+    """Predicted latency of ``algo`` over links of one calibrated class:
+    the closed form evaluated at the class's bandwidth with the hardware's
+    startup replaced by the class's — how the planner prices a collective
+    confined to one rail/direction of an asymmetric topology."""
+    return ALGO_COSTS[algo](M, n, dataclasses.replace(hw, ts=link.ts),
+                            link.bw, **kw)

@@ -19,12 +19,14 @@ import hashlib
 import json
 import math
 import os
+import random
 from typing import Callable, Iterable, Sequence
 
 from . import cost_model
 from .cost_model import Hardware, TPU_V5E
 
-__all__ = ["Decision", "Tuner", "TunerTableError", "default_tuner", "OPS", "RAGGED_OPS"]
+__all__ = ["Decision", "Tuner", "OnlineTuner", "TunerTableError", "default_tuner",
+           "OPS", "RAGGED_OPS", "WIRE_FORMATS", "RECORD_DIMENSIONS"]
 
 
 class TunerTableError(ValueError):
@@ -69,16 +71,23 @@ class Decision:
     ``inkernel=`` call-site flag still outranks it); ``None`` defers to
     ``fused_path``/policy. The auto policy never selects inkernel on its
     own: it enters via this tuned field or the explicit flag.
+
+    ``wire_format`` is what the chunks look like on the wire: 'bf16'
+    (bit-identical passthrough) | 'fp8' | 'int8' (per-block quantized —
+    see :mod:`repro.comm.compress`); ``None`` means passthrough. Like
+    ``exec_path`` it can come from the table (an :class:`OnlineTuner`
+    exploring formats records it) or be pinned at the call site.
     """
 
     algo: str
     num_chunks: int
     chunk_bytes: int
     predicted_s: float
-    source: str  # 'analytic' | 'empirical'
+    source: str  # 'analytic' | 'empirical' | 'explore'
     overlap_depth: int | None = None
     fused_path: bool | None = None
     exec_path: str | None = None
+    wire_format: str | None = None
 
 
 # algorithms the executor can run, with practical applicability predicates
@@ -119,6 +128,46 @@ _OP_CANDIDATES: dict[str, dict[str, Callable[[int, int], bool]]] = {
         "pairwise_alltoallv": lambda M, n: True,
         "ring_alltoallv": lambda M, n: True,
     },
+}
+
+
+WIRE_FORMATS = ("bf16", "fp8", "int8")
+_EXEC_PATHS = ("inkernel", "compiled", "unrolled")
+
+
+def _dim_overlap_depth(v):
+    return max(1, int(v))
+
+
+def _dim_fused_path(v):
+    return bool(v)
+
+
+def _dim_exec_path(v):
+    if v not in _EXEC_PATHS:
+        raise ValueError(
+            f"exec_path must be 'inkernel'|'compiled'|'unrolled', got {v!r}"
+        )
+    return str(v)
+
+
+def _dim_wire_format(v):
+    if v not in WIRE_FORMATS:
+        raise ValueError(
+            f"wire_format must be one of {WIRE_FORMATS}, got {v!r}"
+        )
+    return str(v)
+
+
+# the optional per-point decision dimensions Tuner.record accepts via its
+# `extras` dict: name -> validator/normalizer. Adding a dimension is ONE
+# entry here (plus select()/load() surfacing) — not a signature edit at
+# every record call site.
+RECORD_DIMENSIONS: dict[str, Callable] = {
+    "overlap_depth": _dim_overlap_depth,
+    "fused_path": _dim_fused_path,
+    "exec_path": _dim_exec_path,
+    "wire_format": _dim_wire_format,
 }
 
 
@@ -303,7 +352,31 @@ class Tuner:
         self._fingerprint = (self._version, fp)
         return fp
 
-    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast", overlap_depth: int | None = None, fused_path: bool | None = None, exec_path: str | None = None, sizes: Sequence[int] | None = None) -> None:
+    def record(self, M: int, n: int, algo: str, num_chunks: int, measured_s: float, *, inter_pod: bool = False, op: str = "bcast", sizes: Sequence[int] | None = None, extras: dict | None = None) -> None:
+        """Record one measured point. Optional decision dimensions ride in
+        ``extras`` — one validated dict (:data:`RECORD_DIMENSIONS`:
+        ``overlap_depth``/``fused_path``/``exec_path``/``wire_format``)
+        instead of one keyword per dimension, so the NEXT dimension is a
+        registry entry, not a signature edit at every call site. Unknown
+        dimension keys raise :class:`ValueError` eagerly (even when the
+        improvement guard would discard the measurement).
+
+        Improvement-only: a slower measurement never displaces a faster
+        one at the same key. Each dimension left unset carries over from
+        the previous entry ONLY when that entry was for the SAME
+        algorithm — a depth/routing/format tuned against another
+        algorithm's round profile must not float onto this one.
+        """
+        extras = dict(extras or {})
+        unknown = set(extras) - set(RECORD_DIMENSIONS)
+        if unknown:
+            raise ValueError(
+                f"unknown record dimension(s) {sorted(unknown)}; known "
+                f"dimensions are {sorted(RECORD_DIMENSIONS)}"
+            )
+        extras = {
+            k: RECORD_DIMENSIONS[k](v) for k, v in extras.items() if v is not None
+        }
         key = self._key(M, n, inter_pod, op, self._flat_sizes(sizes))
         prev = self.table.get(key)
         # depth-only entries (record_overlap before any measurement) carry no
@@ -314,49 +387,21 @@ class Tuner:
                 "num_chunks": num_chunks,
                 "measured_s": measured_s,
             }
-            if (
-                overlap_depth is None
-                and prev is not None
-                and "overlap_depth" in prev
-                and prev.get("algo") == algo
-            ):
-                # keep a tuned depth alive — but ONLY across entries for the
-                # same algorithm; a depth tuned against another algorithm's
-                # round/staging profile must not float onto this one. A
-                # depth-only entry (no algo key) also drops: it was tuned
-                # against whatever 'auto' picked, which this measurement may
-                # have just displaced.
-                overlap_depth = prev["overlap_depth"]
-            if overlap_depth is not None:
-                entry["overlap_depth"] = int(overlap_depth)
-            if (
-                fused_path is None
-                and prev is not None
-                and "fused_path" in prev
-                and prev.get("algo") == algo
-            ):
-                # executor routing carries over exactly like overlap_depth:
-                # same-algorithm only — a flag tuned against another
-                # algorithm's round profile must not float onto this one
-                fused_path = prev["fused_path"]
-            if fused_path is not None:
-                entry["fused_path"] = bool(fused_path)
-            if (
-                exec_path is None
-                and prev is not None
-                and "exec_path" in prev
-                and prev.get("algo") == algo
-            ):
-                # same-algorithm-only carryover, exactly like fused_path: a
-                # routing tier tuned against another algorithm's round/class
-                # profile must not float onto this one
-                exec_path = prev["exec_path"]
-            if exec_path is not None:
-                if exec_path not in ("inkernel", "compiled", "unrolled"):
-                    raise ValueError(
-                        f"exec_path must be 'inkernel'|'compiled'|'unrolled', got {exec_path!r}"
-                    )
-                entry["exec_path"] = str(exec_path)
+            for dim in RECORD_DIMENSIONS:
+                val = extras.get(dim)
+                if (
+                    val is None
+                    and prev is not None
+                    and dim in prev
+                    and prev.get("algo") == algo
+                ):
+                    # same-algorithm-only carryover (see docstring); a
+                    # depth-only entry (no algo key) also drops: it was
+                    # tuned against whatever 'auto' picked, which this
+                    # measurement may have just displaced
+                    val = prev[dim]
+                if val is not None:
+                    entry[dim] = val
             self.table[key] = entry
             self._version += 1
 
@@ -479,6 +524,7 @@ class Tuner:
                 overlap_depth=depth,
                 fused_path=hit.get("fused_path"),
                 exec_path=hit.get("exec_path"),
+                wire_format=hit.get("wire_format"),
             )
         # depth-only entries (record_overlap with no measurement yet) keep
         # the analytic pricing and only annotate the decision with the depth
@@ -560,6 +606,11 @@ class Tuner:
                     f"{path}: entry {key!r} exec_path must be "
                     f"'inkernel'|'compiled'|'unrolled', got {entry['exec_path']!r}"
                 )
+            if "wire_format" in entry and entry["wire_format"] not in WIRE_FORMATS:
+                raise TunerTableError(
+                    f"{path}: entry {key!r} wire_format must be one of "
+                    f"{WIRE_FORMATS}, got {entry['wire_format']!r}"
+                )
             if key.startswith("stream:"):
                 # per-stream scheduling decisions (record_stream): structure
                 # choices only — never algo/num_chunks/measured_s
@@ -608,6 +659,153 @@ class Tuner:
             knomial_k=payload.get("knomial_k", 4),
             table=table,
         )
+
+
+class OnlineTuner:
+    """Epsilon-greedy bandit exploration over (algo x num_chunks x
+    wire_format) arms for ONE (op, M, n, inter_pod) point.
+
+    The offline table is a snapshot; a production fleet drifts. This loop
+    closes it: :meth:`propose` usually returns the planned decision
+    (:meth:`Tuner.select` — the table's best), but with probability
+    ``epsilon`` (and always while an arm is untried) it swaps in an
+    exploration arm; :meth:`observe` feeds the measured time back through
+    :meth:`Tuner.record`, so an exploration that beats the incumbent lands
+    in the table, bumps the content fingerprint, and invalidates every
+    cached plan for the point (``plan_cached`` keys on the fingerprint —
+    observable via ``comm.cache_stats()``). Because ``record`` is
+    improvement-only, a bad exploration costs one step and changes
+    nothing.
+
+    Untried arms are visited first in deterministic order, so the planted
+    best arm of a rigged landscape is found within ``len(arms)`` steps —
+    the bounded-convergence property the tests pin.
+    """
+
+    def __init__(
+        self,
+        tuner: Tuner,
+        op: str,
+        M: int,
+        n: int,
+        *,
+        inter_pod: bool = False,
+        arms: Sequence[tuple] | None = None,
+        wire_formats: Sequence[str] = WIRE_FORMATS,
+        epsilon: float = 0.25,
+        seed: int = 0,
+    ):
+        if op not in OPS:
+            raise ValueError(f"unknown collective op {op!r}; have {OPS}")
+        if op in RAGGED_OPS:
+            raise ValueError(
+                f"online exploration over wire formats is scoped to the dense "
+                f"ops, not {op!r} (compressed formats reject ragged chunking)"
+            )
+        self.tuner = tuner
+        self.op, self.M, self.n, self.inter_pod = op, int(M), int(n), bool(inter_pod)
+        self.epsilon = float(epsilon)
+        self._rng = random.Random(seed)
+        for fmt in wire_formats:
+            _dim_wire_format(fmt)
+        self.arms: list[tuple[str, int, str]] = (
+            [self._norm_arm(a) for a in arms]
+            if arms is not None
+            else self._default_arms(tuple(wire_formats))
+        )
+        if not self.arms:
+            raise ValueError(f"no applicable arms for {op!r} at (M={M}, n={n})")
+        # per-arm statistics live HERE, not in the table: the table only
+        # ever holds the best decision, the bandit needs every observation
+        self._pulls = {arm: 0 for arm in self.arms}
+        self._total_s = {arm: 0.0 for arm in self.arms}
+
+    def _norm_arm(self, arm) -> tuple[str, int, str]:
+        algo, num_chunks, fmt = arm
+        return (str(algo), self._arm_chunks(algo) if num_chunks is None
+                else int(num_chunks), _dim_wire_format(fmt))
+
+    def _arm_chunks(self, algo: str) -> int:
+        """Analytic chunk count for an arm (same per-algo logic as
+        :meth:`Tuner.calibrate`'s sweep, collapsed to the model optimum)."""
+        M, n, t = self.M, self.n, self.tuner
+        B = t.hw.path_bw(self.inter_pod)
+        if algo in ("pipelined_chain", "pipelined_reduce_chain"):
+            c = cost_model.optimal_chunk_bytes(M, n, t.hw, B)
+        elif algo == "bidir_chain":
+            c = cost_model.optimal_chunk_bytes(M, (n - 1 + 1) // 2 + 1, t.hw, B)
+        elif algo == "fused_rsb":
+            c = cost_model.optimal_chunk_bytes_fused(M, n, t.hw, B)
+        elif algo in ("scatter_allgather", "ring_allreduce", "ring_allgather",
+                      "doubling_allgather", "ring_reduce_scatter"):
+            return n
+        else:
+            return 1
+        return max(1, min(t.max_chunks, math.ceil(M / c)))
+
+    def _default_arms(self, wire_formats: tuple[str, ...]) -> list:
+        if self.op == "bcast":
+            cands = {a: _CANDIDATES[a] for a in self.tuner.allow if a in _CANDIDATES}
+        else:
+            cands = _OP_CANDIDATES[self.op]
+        return [
+            (algo, self._arm_chunks(algo), fmt)
+            for algo in sorted(cands)
+            if cands[algo](self.M, self.n)
+            for fmt in wire_formats
+        ]
+
+    def _decision(self, arm: tuple[str, int, str]) -> Decision:
+        algo, k, fmt = arm
+        predicted = cost_model.cost_wire(
+            algo, self.M, self.n, self.tuner.hw,
+            wire_format=fmt, inter_pod=self.inter_pod,
+            **({"C": float(math.ceil(self.M / k))} if algo in (
+                "pipelined_chain", "bidir_chain", "pipelined_reduce_chain",
+                "fused_rsb") else {}),
+        ) if algo in cost_model.ALGO_COSTS else float("nan")
+        return Decision(algo, k, math.ceil(self.M / max(1, k)), predicted,
+                        "explore", wire_format=fmt)
+
+    def propose(self) -> Decision:
+        """The decision to run THIS step: an untried arm first (deterministic
+        order), then an epsilon-random arm, else the planned decision."""
+        for arm in self.arms:
+            if self._pulls[arm] == 0:
+                return self._decision(arm)
+        if self._rng.random() < self.epsilon:
+            return self._decision(self._rng.choice(self.arms))
+        return self.tuner.select(self.M, self.n, op=self.op,
+                                 inter_pod=self.inter_pod)
+
+    def observe(self, decision: Decision, measured_s: float) -> None:
+        """Feed one measured step back: bandit statistics here, the
+        improvement-only table update (fingerprint bump on improvement)
+        through :meth:`Tuner.record`."""
+        arm = (decision.algo, int(decision.num_chunks),
+               decision.wire_format or "bf16")
+        if arm in self._pulls:
+            self._pulls[arm] += 1
+            self._total_s[arm] += float(measured_s)
+        self.tuner.record(
+            self.M, self.n, decision.algo, decision.num_chunks,
+            float(measured_s), inter_pod=self.inter_pod, op=self.op,
+            extras={"wire_format": decision.wire_format},
+        )
+
+    def step(self, measure: Callable[[Decision], float]) -> tuple[Decision, float]:
+        """One explore-measure-record cycle; returns (decision, seconds)."""
+        dec = self.propose()
+        t = float(measure(dec))
+        self.observe(dec, t)
+        return dec, t
+
+    def best_arm(self) -> tuple[str, int, str] | None:
+        """Lowest mean measured time among tried arms (None before any)."""
+        tried = [a for a in self.arms if self._pulls[a] > 0]
+        if not tried:
+            return None
+        return min(tried, key=lambda a: self._total_s[a] / self._pulls[a])
 
 
 _DEFAULT: Tuner | None = None

@@ -1,0 +1,118 @@
+"""Per-block quantize/dequantize kernels (Pallas) for compressed wire
+formats.
+
+A compressed collective hop ships each chunk as a low-precision payload
+(int8 or float8_e4m3fn) plus one f32 scale per 256-element block instead of
+the full-precision values: 4x fewer payload bytes at a ~1.6% scale
+overhead. The quantize kernel computes a symmetric abs-max scale per block
+(``scale = max(|x|) / qmax``), divides, clips to the representable range,
+and casts; the dequantize kernel multiplies back. Both run one
+(1, _BLOCK_ELEMS) tile per grid step — the same grid-over-rows contract as
+:func:`repro.kernels.fused_combine`, so the Mosaic pipeliner double-buffers
+block (k+1)'s HBM read under block k's write.
+
+The clip BEFORE the cast is load-bearing for fp8: ``float8_e4m3fn`` has no
+inf, so an out-of-range cast produces NaN, not saturation. With the abs-max
+scale the quotient is already in range; the clip pins the boundary case
+(``|x| == amax`` maps exactly to ``qmax``) against rounding above qmax.
+
+Zero blocks get ``scale = qmax_eps`` (a tiny positive floor) so dequantize
+never divides-by-zero territory — a zero block round-trips to exact zeros
+because the quantized payload is zero regardless of the scale.
+
+Validated with ``interpret=True`` off-TPU (roundtrip property tests); on
+TPU the same code emits the real tiled pipeline. Callers go through
+:func:`repro.kernels.ops.quantize_blocks` / ``dequantize_blocks``, which
+pad ragged tails to the block size and resolve interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "BLOCK_ELEMS",
+    "QUANT_DTYPES",
+    "quantize_blocks",
+    "dequantize_blocks",
+]
+
+# elements per scale block; also the column tile (f32 min-tile friendly,
+# and small enough that the int8/fp8 payload tile stays VREG-aligned)
+BLOCK_ELEMS = 256
+
+# wire dtype -> clipping range qmax (symmetric): int8 uses the symmetric
+# [-127, 127] grid; float8_e4m3fn saturates at +-448 (no inf -> NaN past
+# it, hence the pre-cast clip)
+QUANT_DTYPES = {
+    "int8": (jnp.int8, 127.0),
+    "fp8": (jnp.float8_e4m3fn, 448.0),
+}
+
+# scale floor for all-zero blocks: keeps scale strictly positive without
+# perturbing the roundtrip (payload is 0 -> dequant 0 * floor == 0)
+_SCALE_FLOOR = 1e-30
+
+
+def _quantize_kernel(x_ref, v_ref, s_ref, *, qmax, is_int):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, _SCALE_FLOOR) / qmax
+    q = jnp.clip(x / scale, -qmax, qmax)
+    if is_int:
+        q = jnp.round(q)
+    v_ref[...] = q.astype(v_ref.dtype)
+    s_ref[...] = jnp.full_like(s_ref, scale)
+
+
+def _dequantize_kernel(v_ref, s_ref, x_ref):
+    x_ref[...] = v_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def quantize_blocks(x: jax.Array, fmt: str, *, interpret: bool) -> tuple[jax.Array, jax.Array]:
+    """Quantize ``x`` (B, C) f32 with C a multiple of :data:`BLOCK_ELEMS`
+    into ``(values (B, C) wire-dtype, scales (B, C // BLOCK_ELEMS) f32)``.
+    Callers own padding; see :func:`repro.kernels.ops.quantize_blocks`.
+    """
+    dtype, qmax = QUANT_DTYPES[fmt]
+    B, C = x.shape
+    nblocks = C // BLOCK_ELEMS
+
+    def kernel(x_ref, v_ref, s_ref):
+        _quantize_kernel(x_ref, v_ref, s_ref, qmax=qmax, is_int=fmt == "int8")
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nblocks),
+        in_specs=[pl.BlockSpec((1, BLOCK_ELEMS), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK_ELEMS), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C), dtype),
+            jax.ShapeDtypeStruct((B, nblocks), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_blocks(values: jax.Array, scales: jax.Array, *,
+                      interpret: bool) -> jax.Array:
+    """Inverse of :func:`quantize_blocks`: (B, C) wire-dtype + per-block f32
+    scales back to (B, C) f32."""
+    B, C = values.shape
+    nblocks = C // BLOCK_ELEMS
+    assert scales.shape == (B, nblocks), (values.shape, scales.shape)
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=(B, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_ELEMS), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_ELEMS), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        interpret=interpret,
+    )(values, scales)

@@ -20,10 +20,12 @@ from ..optim.schedules import warmup_cosine
 from . import checkpoint as ckpt_lib
 from .train_step import (
     make_bcast_train_step,
+    make_compressed_allreduce_train_step,
     make_degraded_psum_train_step,
     make_overlap_allreduce_train_step,
     make_train_step,
     make_tuned_allreduce_train_step,
+    with_error_feedback,
 )
 
 __all__ = ["Trainer"]
@@ -45,6 +47,10 @@ class Trainer:
         self.model = Model(cfg)
         self.mesh = mesh if mesh is not None else make_local_mesh(1)
         self.optimizer = get_optimizer(run.optimizer, run.weight_decay)
+        if run.sync_mode == "compressed_allreduce":
+            # the EF residual rides in opt_state['ef'] so it checkpoints,
+            # restores, and donates with the rest of the optimizer state
+            self.optimizer = with_error_feedback(self.optimizer)
         self.lr_fn = warmup_cosine(run.learning_rate, run.warmup_steps, run.total_steps)
         self.source = make_source(cfg, path=data_path, seed=run.seed)
         self.ckpt_dir = ckpt_dir
@@ -59,6 +65,7 @@ class Trainer:
             "param_bcast": make_bcast_train_step,
             "tuned_allreduce": make_tuned_allreduce_train_step,
             "overlap_allreduce": make_overlap_allreduce_train_step,
+            "compressed_allreduce": make_compressed_allreduce_train_step,
         }
         if self.health is not None and not self.health.healthy and self.health.dead_ranks:
             # graceful degradation: the tuned schedules assume every rank is

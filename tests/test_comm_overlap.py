@@ -230,7 +230,8 @@ def test_load_clamps_and_validates(tmp_path):
 def test_overlap_depth_roundtrip_and_dryrun_gate(tmp_path):
     t = Tuner()
     M, n = 1 << 20, 8
-    t.record(M, n, "ring_allreduce", n, 1e-6, op="allreduce", overlap_depth=3)
+    t.record(M, n, "ring_allreduce", n, 1e-6, op="allreduce",
+             extras={"overlap_depth": 3})
     assert t.select(M, n, op="allreduce").overlap_depth == 3
     # a faster measurement of the SAME algorithm keeps the tuned depth alive
     t.record(M, n, "ring_allreduce", n, 8e-7, op="allreduce")
@@ -239,7 +240,8 @@ def test_overlap_depth_roundtrip_and_dryrun_gate(tmp_path):
     # round/staging profile must not float onto another
     t.record(M, n, "fused_rsb", 4, 5e-7, op="allreduce")
     assert t.select(M, n, op="allreduce").overlap_depth is None
-    t.record(M, n, "fused_rsb", 4, 4e-7, op="allreduce", overlap_depth=3)
+    t.record(M, n, "fused_rsb", 4, 4e-7, op="allreduce",
+             extras={"overlap_depth": 3})
     p = str(tmp_path / "t.json")
     t.save(p)
     assert Tuner.load(p).select(M, n, op="allreduce").overlap_depth == 3

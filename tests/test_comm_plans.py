@@ -378,7 +378,8 @@ def test_decision_fused_path_roundtrip(tmp_path):
     from repro.comm.api import _use_compiled
 
     t = Tuner()
-    t.record(1 << 20, 8, "fused_rsb", 16, 1e-4, op="allreduce", fused_path=True)
+    t.record(1 << 20, 8, "fused_rsb", 16, 1e-4, op="allreduce",
+             extras={"fused_path": True})
     dec = t.select(1 << 20, 8, op="allreduce")
     assert dec.fused_path is True
     p = tmp_path / "table.json"

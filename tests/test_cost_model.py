@@ -157,7 +157,8 @@ def test_tuner_exec_path_roundtrip(tmp_path):
 
     t = Tuner()
     M, n = 1 << 20, 8
-    t.record(M, n, "pipelined_chain", 8, measured_s=1e-9, exec_path="inkernel")
+    t.record(M, n, "pipelined_chain", 8, measured_s=1e-9,
+             extras={"exec_path": "inkernel"})
     hit = t.select(M, n)
     assert hit.source == "empirical" and hit.exec_path == "inkernel"
     p = str(tmp_path / "table.json")
@@ -165,7 +166,8 @@ def test_tuner_exec_path_roundtrip(tmp_path):
     assert Tuner.load(p).select(M, n).exec_path == "inkernel"
     with pytest.raises(ValueError):
         # a winning measurement with a bogus tier must be rejected, not stored
-        t.record(M, n, "chain", 1, measured_s=1e-12, exec_path="warp_specialized")
+        t.record(M, n, "chain", 1, measured_s=1e-12,
+                 extras={"exec_path": "warp_specialized"})
     from repro.core.tuner import TunerTableError
 
     blob = json.load(open(p))

@@ -100,5 +100,7 @@ for v in vals[1:]:
     assert abs(v[-1] - vals[0][-1]) < 0.05, losses # same trajectory
 print("PASS")
 """,
-        timeout=580,
+        # five trainer builds in one subprocess: ~495 s on an idle 8-core
+        # runner; the old 580 s budget timed out under suite-level load
+        timeout=840,
     )
